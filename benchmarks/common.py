@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: the four approaches of paper Fig. 7, run over
+fresh market replicas so billing never leaks across approaches."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.market import SpotMarket
+from repro.core.orchestrator import RunResult, build_spottune, run_single_spot_baseline
+from repro.core.trial import SimTrialBackend, Workload, make_trials
+
+MARKET_DAYS = 12
+MARKET_SEED = 3
+
+
+def fresh_market(seed: int = MARKET_SEED, **kw) -> SpotMarket:
+    return SpotMarket(days=MARKET_DAYS, seed=seed, **kw)
+
+
+def run_approaches(workload: Workload, revpred_factory, thetas=(0.7, 1.0),
+                   seed: int = 0) -> dict:
+    """-> {approach_name: RunResult} for one workload.
+
+    Baselines (paper §IV-A4): one dedicated never-revoked spot instance per
+    trial; cheapest = lowest on-demand price, fastest = most chips.
+    """
+    trials = make_trials(workload)
+    backend = SimTrialBackend(fresh_market().pool)
+    out = {}
+    for theta in thetas:
+        m = fresh_market()
+        rp = revpred_factory(m)
+        orch = build_spottune(trials, m, backend, rp, theta=theta,
+                              mcnt=3, seed=seed)
+        out[f"spottune_{theta}"] = orch.run()
+    m = fresh_market()
+    cheapest = min(m.pool, key=lambda i: i.od_price)
+    out["single_cheapest"] = run_single_spot_baseline(m, backend, trials, cheapest)
+    m = fresh_market()
+    fastest = max(m.pool, key=lambda i: i.chips)
+    out["single_fastest"] = run_single_spot_baseline(m, backend, trials, fastest)
+    return out
+
+
+def pcr_table(results: dict, norm_key: str = "spottune_0.7") -> dict:
+    base = results[norm_key].pcr()
+    return {k: r.pcr() / base for k, r in results.items()}
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

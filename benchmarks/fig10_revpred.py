@@ -1,0 +1,71 @@
+"""Paper Fig. 10: RevPred vs Tributary-predict vs Logistic Regression —
+accuracy/F1 on held-out market days, plus the integrated effect (SpotTune
+cost/PCR with each predictor plugged into Eq. 2).
+
+RevPred's two deltas over Tributary (paper §III-B): split history/present
+input paths, and Algorithm-2 border-sampled max prices for training labels.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fresh_market
+from repro.core.market import SpotMarket
+from repro.core.orchestrator import build_spottune
+from repro.core.revpred import RevPred, build_dataset, evaluate
+from repro.core.trial import WORKLOADS, SimTrialBackend, make_trials
+
+TRAIN_DAYS = 9          # paper: 04/26-05/04 train, 05/05-05/07 eval
+EVAL_DAYS = 3
+
+
+def run(epochs: int = 4, stride: int = 5, integrated: bool = True) -> list[tuple]:
+    rows = []
+    market = fresh_market()
+    train_min = TRAIN_DAYS * 1440
+    eval_lo, eval_hi = train_min, (TRAIN_DAYS + EVAL_DAYS) * 1440 - 70
+
+    predictors = {}
+    metrics = {}
+    for kind in ("revpred", "tributary", "logreg"):
+        rp = RevPred.train(market, train_min, kind=kind, epochs=epochs,
+                           stride=stride)
+        predictors[kind] = rp
+        accs, f1s = [], []
+        rng = np.random.default_rng(1)
+        for inst in market.pool:
+            data = build_dataset(market.traces[inst.name], inst.od_price,
+                                 eval_lo, eval_hi, "random", rng, stride=2)
+            m = evaluate(rp.predictors[inst.name], data)
+            accs.append(m["accuracy"])
+            f1s.append(m["f1"])
+        metrics[kind] = (float(np.mean(accs)), float(np.mean(f1s)))
+        rows.append((f"fig10_{kind}_accuracy", 0.0, round(metrics[kind][0], 4)))
+        rows.append((f"fig10_{kind}_f1", 0.0, round(metrics[kind][1], 4)))
+
+    rows.append(("fig10_acc_gain_vs_tributary_pct", 0.0, round(
+        100 * (metrics["revpred"][0] - metrics["tributary"][0])
+        / max(metrics["tributary"][0], 1e-9), 2)))
+    rows.append(("fig10_f1_gain_vs_tributary_pct", 0.0, round(
+        100 * (metrics["revpred"][1] - metrics["tributary"][1])
+        / max(metrics["tributary"][1], 1e-9), 2)))
+
+    if integrated:
+        # integrated comparison (paper Fig. 10(c)): plug each predictor into
+        # the provisioner, run one workload
+        w = WORKLOADS[0]
+        trials = make_trials(w)
+        for kind in ("revpred", "tributary"):
+            m = fresh_market()
+            rp = predictors[kind]
+            rp.market = m  # same traces (same seed) — fresh billing ledger
+            rp._p_cache = {}
+            backend = SimTrialBackend(m.pool)
+            res = build_spottune(trials, m, backend, rp, theta=0.7,
+                                 mcnt=3, seed=0).run()
+            rows.append((f"fig10_integrated_{kind}_cost_usd", 0.0,
+                         round(res.cost, 3)))
+            rows.append((f"fig10_integrated_{kind}_pcr", 0.0,
+                         round(res.pcr() * 1e6, 4)))
+    return rows

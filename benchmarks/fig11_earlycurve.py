@@ -1,0 +1,64 @@
+"""Paper Fig. 11: EarlyCurve vs SLAQ training-trend prediction error.
+
+Evaluated on (a) the simulation backend's staged curves (the 16-config
+ResNet-analogue grid, as the paper's Fig. 11(b)) and (b) a REAL multi-stage
+curve from training a reduced LM with a staircase LR schedule on CPU."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.earlycurve import EarlyCurve, SLAQPredictor
+from repro.core.market import DEFAULT_POOL
+from repro.core.trial import WORKLOADS, SimTrialBackend, make_trials
+
+
+def run(theta: float = 0.7, real: bool = True) -> list[tuple]:
+    rows = []
+    backend = SimTrialBackend(DEFAULT_POOL)
+    ec, slaq = EarlyCurve(), SLAQPredictor()
+
+    w = WORKLOADS[5]  # ResNet analogue: 16 configs (paper Fig. 11(b))
+    errs = {"earlycurve": [], "slaq": []}
+    staged_errs = {"earlycurve": [], "slaq": []}
+    for tr in make_trials(w):
+        curve = backend.curve(tr)
+        steps = np.arange(w.val_every, w.max_trial_steps + 1, w.val_every)
+        cut = int(theta * len(curve))
+        tf = curve[-1]
+        p_ec = ec.predict_final(steps[:cut], curve[:cut], w.max_trial_steps)
+        p_sl = slaq.predict_final(steps[:cut], curve[:cut], w.max_trial_steps)
+        e_ec, e_sl = abs(p_ec - tf) / tf, abs(p_sl - tf) / tf
+        errs["earlycurve"].append(e_ec)
+        errs["slaq"].append(e_sl)
+        if len(ec.stages(curve[:cut])) > 1:
+            staged_errs["earlycurve"].append(e_ec)
+            staged_errs["slaq"].append(e_sl)
+    for k in errs:
+        rows.append((f"fig11_{k}_err_mean", 0.0, round(float(np.mean(errs[k])), 4)))
+    for k in staged_errs:
+        if staged_errs[k]:
+            rows.append((f"fig11_{k}_err_multistage", 0.0,
+                         round(float(np.mean(staged_errs[k])), 4)))
+
+    if real:
+        # real curve: tiny LM with staircase LR decay (creates the Fig. 5(b)
+        # multi-stage shape), predict final from the first theta fraction
+        from repro.configs.base import get_config
+        from repro.launch.train import Trainer
+        from repro.optim.schedules import exponential_decay_schedule
+
+        cfg = get_config("qwen1.5-0.5b", reduced=True)
+        sched = exponential_decay_schedule(8e-3, 0.3, 30, staircase=True)
+        tr = Trainer(cfg, batch=4, seq=16, seed=0, lr_schedule=sched, val_every=2)
+        tr.run_steps(90)
+        steps = np.array(tr.metrics_steps)
+        vals = np.array(tr.metrics_vals)
+        cut = int(theta * len(vals))
+        tf = vals[-1]
+        p_ec = ec.predict_final(steps[:cut], vals[:cut], steps[-1])
+        p_sl = slaq.predict_final(steps[:cut], vals[:cut], steps[-1])
+        rows.append(("fig11_real_earlycurve_err", 0.0,
+                     round(abs(p_ec - tf) / tf, 4)))
+        rows.append(("fig11_real_slaq_err", 0.0, round(abs(p_sl - tf) / tf, 4)))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 8: sensitivity to θ — cost (∝θ, with refund-driven
+non-monotonicities), JCT (near-linear in θ), and EarlyCurve top-1/top-3
+selection accuracy (reaches top-3 = 100% at θ >= 0.7)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fresh_market
+from repro.core.orchestrator import build_spottune
+from repro.core.revpred import OracleRevPred
+from repro.core.trial import WORKLOADS, SimTrialBackend, make_trials
+
+
+def run(thetas=(0.1, 0.3, 0.5, 0.7, 0.9, 1.0), workloads=None) -> list[tuple]:
+    rows = []
+    acc_by_theta = {}
+    for theta in thetas:
+        costs, jcts, top1, top3 = [], [], [], []
+        for w in (workloads or WORKLOADS[:3]):
+            trials = make_trials(w)
+            m = fresh_market()
+            backend = SimTrialBackend(m.pool)
+            res = build_spottune(trials, m, backend, OracleRevPred(m),
+                                 theta=theta, mcnt=3, seed=0).run()
+            costs.append(res.cost)
+            jcts.append(res.jct)
+            top1.append(res.top1_correct)
+            top3.append(res.top3_contains_best)
+        rows.append((f"fig8_theta{theta}_cost_usd", 0.0, round(float(np.sum(costs)), 3)))
+        rows.append((f"fig8_theta{theta}_jct_s", 0.0, round(float(np.sum(jcts)), 1)))
+        rows.append((f"fig8_theta{theta}_top1_acc", 0.0, float(np.mean(top1))))
+        rows.append((f"fig8_theta{theta}_top3_acc", 0.0, float(np.mean(top3))))
+        acc_by_theta[theta] = float(np.mean(top3))
+    return rows

@@ -1,0 +1,27 @@
+"""Roofline summary rows from the dry-run artifacts (deliverable g).
+
+Emits one row per (arch × shape) with the dominant term and the roofline
+fraction, for both meshes when available.  The full three-term table lives
+in EXPERIMENTS.md §Roofline; this bench keeps the numbers regenerable."""
+
+from __future__ import annotations
+
+from repro.launch.roofline import pick_hillclimb_targets, table
+
+
+def run(meshes=("single", "multi")) -> list[tuple]:
+    rows = []
+    for mesh in meshes:
+        t = table(mesh)
+        if not t:
+            continue
+        for r in t:
+            rows.append((
+                f"roofline_{mesh}_{r['arch']}_{r['shape']}_dom_{r['dominant']}",
+                0.0, round(100 * r["roofline_fraction"], 2)))
+        if mesh == "single":
+            targets = pick_hillclimb_targets(t)
+            for k, r in targets.items():
+                rows.append((f"roofline_target_{k}", 0.0,
+                             f"{r['arch']}x{r['shape']}"))
+    return rows

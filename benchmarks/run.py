@@ -1,0 +1,68 @@
+"""Benchmark driver: one module per paper table/figure + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` trims the
+simulation workload count (CI); default runs the full suite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,fig12,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (fig6_profiling, fig7_cost_perf, fig8_theta,
+                            fig9_refund, fig10_revpred, fig11_earlycurve,
+                            fig12_checkpoint, roofline_report)
+    from repro.core.trial import WORKLOADS
+
+    quick_w = WORKLOADS[:2]
+    suite = {
+        "fig6": lambda: fig6_profiling.run(),
+        "fig7": lambda: fig7_cost_perf.run(
+            workloads=quick_w if args.quick else None),
+        "fig8": lambda: fig8_theta.run(
+            thetas=(0.3, 0.7, 1.0) if args.quick else (0.1, 0.3, 0.5, 0.7, 0.9, 1.0),
+            workloads=quick_w if args.quick else None),
+        "fig9": lambda: fig9_refund.run(workloads=quick_w if args.quick else None),
+        "fig10": lambda: fig10_revpred.run(
+            epochs=2 if args.quick else 4, stride=8 if args.quick else 5,
+            integrated=not args.quick),
+        "fig11": lambda: fig11_earlycurve.run(real=not args.quick),
+        "fig12": lambda: fig12_checkpoint.run(
+            workloads=quick_w if args.quick else None),
+        "roofline": lambda: roofline_report.run(),
+    }
+    only = set(args.only.split(",")) if args.only else set(suite)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suite.items():
+        if name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:
+            failures += 1
+            print(f"{name}_ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+            continue
+        wall = (time.perf_counter() - t0) * 1e6
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}", flush=True)
+        print(f"{name}_wall,{wall:.1f},ok", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

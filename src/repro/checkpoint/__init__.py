@@ -1,0 +1,7 @@
+from repro.checkpoint.object_store import LocalObjectStore, ThrottledStore  # noqa: F401
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)

@@ -1,0 +1,22 @@
+"""SpotTune core: the paper's contribution.
+
+market        transient-resource market simulator (prices, revocation, refund)
+revpred       LSTM revocation-probability predictor (+ Tributary/LogReg baselines)
+earlycurve    staged training-trend prediction (+ SLAQ baseline)
+provisioner   Eq. 1-2 expected step cost, argmin instance selection
+orchestrator  Algorithm 1 event loop + single-spot baselines
+trial         HP grids + simulated workload suite (paper Table II)
+"""
+
+from repro.core.earlycurve import EarlyCurve, SLAQPredictor  # noqa: F401
+from repro.core.market import DEFAULT_POOL, InstanceType, SpotMarket  # noqa: F401
+from repro.core.orchestrator import (  # noqa: F401
+    Orchestrator,
+    OrchestratorConfig,
+    RunResult,
+    build_spottune,
+    run_single_spot_baseline,
+)
+from repro.core.provisioner import PerfModel, Provisioner, ZeroRevPred  # noqa: F401
+from repro.core.revpred import OracleRevPred, RevPred  # noqa: F401
+from repro.core.trial import WORKLOADS, SimTrialBackend, TrialSpec, make_trials  # noqa: F401

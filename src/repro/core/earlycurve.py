@@ -1,0 +1,188 @@
+"""EarlyCurve: staged ML-training-trend prediction (paper §III-C, Eq. 4-7).
+
+The metric trajectory is modeled as a *piecewise* sublinear curve
+
+    L̂(k) = Σ_i [ 1/(αᵢ₀·k² + αᵢ₁·k + αᵢ₂) + αᵢ₃ ] · 1[lᵢ ≤ k < rᵢ]
+
+with non-negative coefficients — the O(1/k)–O(1/k²) envelope of
+gradient-descent convergence (paper §V-B).  Stage boundaries are detected
+online with the Eq. 7 heuristic: a change-rate spike (ζᵢ > ξ) following ≥5
+quiet steps (ζⱼ < ε) starts a new stage — this is what periodic LR decay
+looks like (paper Fig. 5(b)) and what single-stage fitters (SLAQ) get wrong.
+
+Fitting: damped Gauss-Newton (Levenberg-Marquardt) on softplus-parametrized
+coefficients, pure-jnp and jit-compiled (the paper used scipy least_squares;
+LM on 4 params is equivalent and keeps the solver JAX-native).  Prediction
+at ``max_trial_steps`` extrapolates the *final* detected stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 stage detection
+# ---------------------------------------------------------------------------
+
+
+def detect_stages(vals: Sequence[float], xi: float = 0.5, eps: float = 0.01,
+                  quiet: int = 5) -> List[Tuple[int, int]]:
+    """Half-open [l, r) stage intervals partitioning [0, len(vals))  (Eq. 6)."""
+    v = np.asarray(vals, np.float64)
+    T = len(v)
+    if T <= 1:
+        return [(0, T)]
+    zeta = np.zeros(T)
+    zeta[1:] = np.abs(np.diff(v)) / np.maximum(np.abs(v[:-1]), 1e-12)
+    bounds = [0]
+    for i in range(1, T):
+        if zeta[i] > xi and i - quiet >= 1 and np.all(zeta[max(1, i - quiet):i] < eps):
+            bounds.append(i)
+    bounds.append(T)
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 curve fit (softplus-LM)
+# ---------------------------------------------------------------------------
+
+
+def _curve(alpha, k):
+    """alpha = softplus-pre-params (4,); k normalized steps."""
+    a = jax.nn.softplus(alpha)
+    denom = a[0] * k * k + a[1] * k + a[2] + 1e-9
+    return 1.0 / denom + a[3]
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _fit_lm(k, y, alpha0, iters: int = 60):
+    """Damped Gauss-Newton on MSE; returns best pre-params."""
+
+    def residual(alpha):
+        return _curve(alpha, k) - y
+
+    def cost(alpha):
+        r = residual(alpha)
+        return jnp.mean(r * r)
+
+    jac_fn = jax.jacfwd(residual)
+
+    def body(carry, _):
+        alpha, lam, best_a, best_c = carry
+        r = residual(alpha)
+        J = jac_fn(alpha)                                 # (N, 4)
+        JTJ = J.T @ J
+        g = J.T @ r
+        step = jnp.linalg.solve(JTJ + lam * jnp.eye(4), g)
+        cand = alpha - step
+        c_new, c_old = cost(cand), cost(alpha)
+        improved = c_new < c_old
+        alpha = jnp.where(improved, cand, alpha)
+        lam = jnp.where(improved, lam * 0.5, lam * 2.5)
+        lam = jnp.clip(lam, 1e-8, 1e8)
+        c_cur = jnp.where(improved, c_new, c_old)
+        best_a = jnp.where(c_cur < best_c, alpha, best_a)
+        best_c = jnp.minimum(c_cur, best_c)
+        return (alpha, lam, best_a, best_c), None
+
+    init = (alpha0, jnp.asarray(1e-2), alpha0, cost(alpha0))
+    (alpha, _, best_a, best_c), _ = jax.lax.scan(body, init, None, length=iters)
+    return best_a, best_c
+
+
+def fit_stage(ks: np.ndarray, ys: np.ndarray, n_restarts: int = 4,
+              seed: int = 0):
+    """Fit one stage.  Returns (pre-params, k_scale, y_off, y_scale, rmse)."""
+    ks = np.asarray(ks, np.float64)
+    ys = np.asarray(ys, np.float64)
+    k_scale = max(float(ks[-1]), 1.0)
+    y_off = float(np.min(ys))
+    y_scale = max(float(np.max(ys) - y_off), 1e-9)
+    kn = jnp.asarray(ks / k_scale, jnp.float32)
+    yn = jnp.asarray((ys - y_off) / y_scale, jnp.float32)
+
+    rng = np.random.default_rng(seed)
+    best = None
+    inits = [np.array([0.0, 0.5, 0.5, -2.0], np.float32)]
+    for _ in range(n_restarts - 1):
+        inits.append(rng.normal(0, 1.5, 4).astype(np.float32))
+    for a0 in inits:
+        a, c = _fit_lm(kn, yn, jnp.asarray(a0))
+        c = float(c)
+        if best is None or c < best[1]:
+            best = (np.asarray(a), c)
+    return {"alpha": best[0], "k_scale": k_scale, "y_off": y_off,
+            "y_scale": y_scale, "rmse": float(np.sqrt(best[1]))}
+
+
+def predict_from_fit(fit: dict, k: float) -> float:
+    yn = float(_curve(jnp.asarray(fit["alpha"]), jnp.asarray(k / fit["k_scale"],
+                                                             jnp.float32)))
+    return yn * fit["y_scale"] + fit["y_off"]
+
+
+# ---------------------------------------------------------------------------
+# public predictors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EarlyCurve:
+    """Staged predictor (the paper's).  ``min_points``: smallest final-stage
+    sample count worth fitting; shorter stages fall back to last value."""
+
+    xi: float = 0.5
+    eps: float = 0.01
+    quiet: int = 5
+    min_points: int = 8
+    plateau_window: int = 20
+    plateau_tol: float = 2e-3
+
+    def stages(self, vals: Sequence[float]) -> List[Tuple[int, int]]:
+        return detect_stages(vals, self.xi, self.eps, self.quiet)
+
+    def converged(self, vals: Sequence[float]) -> bool:
+        """Plateau detection (paper §III-C special case)."""
+        v = np.asarray(vals, np.float64)
+        if len(v) < self.plateau_window:
+            return False
+        w = v[-self.plateau_window:]
+        rel = np.abs(np.diff(w)) / np.maximum(np.abs(w[:-1]), 1e-12)
+        return bool(np.max(rel) < self.plateau_tol)
+
+    def predict_final(self, steps: Sequence[int], vals: Sequence[float],
+                      target_step: int, seed: int = 0) -> float:
+        """Predict the metric at ``target_step`` from a partial trajectory."""
+        steps = np.asarray(steps)
+        vals = np.asarray(vals, np.float64)
+        segs = self.stages(vals)
+        l, r = segs[-1]
+        if r - l < self.min_points:
+            # final stage too fresh to fit — combine with previous stage tail
+            if len(segs) >= 2:
+                l = segs[-2][0]
+            if r - l < self.min_points:
+                return float(vals[-1])
+        ks = steps[l:r] - steps[l] + 1   # re-zero stage clock (Eq. 4 per-stage)
+        fit = fit_stage(ks, vals[l:r], seed=seed)
+        return predict_from_fit(fit, float(target_step - steps[l] + 1))
+
+
+@dataclasses.dataclass
+class SLAQPredictor:
+    """Single-stage baseline (paper §VI-D / Fig. 11): same curve family,
+    fit over the whole trajectory, blind to LR-decay stages."""
+
+    def predict_final(self, steps: Sequence[int], vals: Sequence[float],
+                      target_step: int, seed: int = 0) -> float:
+        steps = np.asarray(steps)
+        vals = np.asarray(vals, np.float64)
+        fit = fit_stage(steps - steps[0] + 1, vals, seed=seed)
+        return predict_from_fit(fit, float(target_step - steps[0] + 1))

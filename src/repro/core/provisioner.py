@@ -1,0 +1,114 @@
+"""Provisioner: fine-grained cost-aware instance selection (paper §III-A).
+
+Implements Algorithm 1's ``getBestInst`` with Eq. 1–2:
+
+    E[eCost] = (1 − p) · price̅ · 1 hour                  (Eq. 1)
+    E[sCost] = M[inst][hp] · (1 − p) · price̅             (Eq. 2, $/step)
+
+p comes from RevPred for a *sampled* maximum price (current price + a random
+delta in [1e-5, 0.2], exactly Algorithm 1 line 4); price̅ is the trailing-hour
+mean.  The (1 − p) factor is what makes SpotTune *court* revocation-prone
+markets: an instance likely to be revoked in its first hour is probabilistically
+free (the refund), so its expected step cost shrinks.
+
+M (the performance matrix, seconds/step) is initialized ∝ 1/chips — the TPU
+analogue of the paper's per-CPU-core init — and updated online from observed
+step times (Algorithm 1 line 36, EWMA).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.market import HOUR, InstanceType, SpotMarket
+from repro.core.trial import TrialSpec
+
+
+class PerfModel:
+    """The M matrix: M[inst][trial] seconds/step, online-updated.
+
+    Prior: M0 = c0 / chips^prior_exp.  The paper initializes ∝ 1/cores
+    (linear); on TPU slices the speedup is well-known to be sublinear in
+    chips, and a linear prior over a 64x pool makes big slices look
+    spuriously cost-efficient until observed, starving exploration of the
+    cheap ones (hardware adaptation noted in DESIGN.md §2)."""
+
+    def __init__(self, pool, c0: float = 8.0, ewma: float = 0.5,
+                 prior_exp: float = 0.6):
+        self.pool = pool
+        self.c0 = c0
+        self.ewma = ewma
+        self.prior_exp = prior_exp
+        self._m: Dict[Tuple[str, str], float] = {}
+        self._observed: Dict[Tuple[str, str], bool] = {}
+
+    def get(self, inst: InstanceType, trial: TrialSpec) -> float:
+        return self._m.get((inst.name, trial.key),
+                           self.c0 / inst.chips ** self.prior_exp)
+
+    def update(self, inst: InstanceType, trial: TrialSpec, secs_per_step: float):
+        key = (inst.name, trial.key)
+        if key in self._m and self._observed.get(key):
+            self._m[key] = (1 - self.ewma) * self._m[key] + self.ewma * secs_per_step
+        else:
+            self._m[key] = secs_per_step
+        self._observed[key] = True
+
+    def observed(self, inst: InstanceType, trial: TrialSpec) -> bool:
+        return self._observed.get((inst.name, trial.key), False)
+
+
+@dataclasses.dataclass
+class Choice:
+    inst: InstanceType
+    max_price: float
+    p_revoke: float
+    step_cost: float
+
+
+class Provisioner:
+    def __init__(self, market: SpotMarket, revpred, perf: PerfModel,
+                 seed: int = 0, delta_lo: float = 0.00001, delta_hi: float = 0.2):
+        self.market = market
+        self.revpred = revpred
+        self.perf = perf
+        self.rng = np.random.default_rng(seed)
+        self.delta_lo = delta_lo
+        self.delta_hi = delta_hi
+
+    def best_instance(self, t: float, trial: TrialSpec,
+                      exclude: Optional[set] = None) -> Choice:
+        """Algorithm 1 getBestInst: argmin over the pool of Eq. 2."""
+        best: Optional[Choice] = None
+        for inst in self.market.pool:
+            if exclude and inst.name in exclude:
+                continue
+            # delta scaled to the market's price level (paper's [1e-5, 0.2]
+            # interval assumes sub-dollar instances — see revpred.py)
+            max_price = self.market.price(inst, t) + float(
+                self.rng.uniform(self.delta_lo, self.delta_hi)) * (
+                inst.od_price / 0.33)
+            p = float(self.revpred.predict(inst, t, max_price))
+            p = min(max(p, 0.0), 1.0)
+            m = self.perf.get(inst, trial)
+            avg = self.market.avg_price(inst, t)
+            s_cost = m * (1.0 - p) * avg / HOUR
+            # tie-break expected-free candidates (p -> 1 zeroes Eq. 2) by the
+            # downside cost — what a step costs if the refund never arrives
+            # (e.g. the trial finishes inside the hour)
+            key = (s_cost, m * avg)
+            if best is None or key < best_key:
+                best, best_key = Choice(inst, max_price, p, s_cost), key
+        assert best is not None, "empty pool"
+        return best
+
+
+class ZeroRevPred:
+    """p ≡ 0: degenerates Eq. 2 to pure (speed × price) — the paper's §V-A
+    stable-market scenario, and an ablation baseline."""
+
+    def predict(self, inst, t, max_price) -> float:
+        return 0.0

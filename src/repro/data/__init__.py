@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMDataset, prefetch  # noqa: F401

@@ -1,0 +1,110 @@
+"""Flash attention Pallas kernel (TPU target).
+
+Blocked online-softmax attention: grid (B, H, Sq/bq, Sk/bk) with the KV-block
+axis innermost and sequential; the (bq, D) output accumulator and the (bq,)
+running max / normalizer live in VMEM scratch across the KV sweep, so HBM
+traffic is O(S·D) and VMEM holds one (bq, bk) score tile at a time.  MXU
+alignment: bq/bk default 128, D expected a multiple of 128 (the callers pad).
+
+Causal handling: blocks entirely above the diagonal are skipped via
+``@pl.when`` (no MXU work issued), the diagonal block is masked elementwise —
+this is the tiling half of the 2x causal-FLOP saving the pure-XLA scan path
+cannot express (see EXPERIMENTS.md §Perf).
+
+Layout: q, k, v are (B, S, H, D) — GQA callers expand KV heads first (the
+per-shard expansion is free under the 'expand' sharding mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, scale: float, block_q: int, block_k: int,
+            n_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = (ik * block_k) <= (iq * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _fin():
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret", "scale"))
+def flash_attention_pallas(q, k, v, causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False,
+                           scale: float | None = None):
+    """q, k, v: (B, S, H, D) with shared H (expand GQA first)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale_v = float(scale if scale is not None else D ** -0.5)
+    n_k_blocks = Sk // bk
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    scratch = [pltpu.VMEM((bq,), jnp.float32),
+               pltpu.VMEM((bq,), jnp.float32),
+               pltpu.VMEM((bq, D), jnp.float32)]
+
+    kern = functools.partial(
+        _kernel, causal=causal, scale=scale_v, block_q=bq, block_k=bk,
+        n_k_blocks=n_k_blocks)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, Sq // bq, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,83 @@
+"""Fused LSTM cell Pallas kernel (RevPred's hot spot, paper §III-B).
+
+One kernel fuses the two gate matmuls (x·W_ih + h·W_hh), the bias add, the
+four gate nonlinearities and the state update — on GPU this is the cuDNN
+fused cell; on TPU we tile the batch and hidden dims so the (bb, 4, bh) gate
+tile lives in VMEM and both matmuls hit the MXU back-to-back.
+
+Weights are laid out (I, 4, H) / (H, 4, H) so a hidden-tile block pulls all
+four gates for its columns in one contiguous BlockSpec (gate order i,f,g,o —
+matches ref.lstm_cell_ref).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific memory spaces (absent on CPU builds)
+    from jax.experimental.pallas import tpu as pltpu
+
+    VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    VMEM = None
+
+
+def _kernel(x_ref, h_ref, c_ref, wih_ref, whh_ref, b_ref, h_out, c_out):
+    x = x_ref[...].astype(jnp.float32)          # (bb, I)
+    h = h_ref[...].astype(jnp.float32)          # (bb, H)
+    wih = wih_ref[...].astype(jnp.float32)      # (I, 4, bh)
+    whh = whh_ref[...].astype(jnp.float32)      # (H, 4, bh)
+    b = b_ref[...].astype(jnp.float32)          # (4, bh)
+    gates = (
+        jax.lax.dot_general(x, wih, (((1,), (0,)), ((), ())))
+        + jax.lax.dot_general(h, whh, (((1,), (0,)), ((), ())))
+        + b[None]
+    )                                           # (bb, 4, bh)
+    i = jax.nn.sigmoid(gates[:, 0])
+    f = jax.nn.sigmoid(gates[:, 1])
+    g = jnp.tanh(gates[:, 2])
+    o = jax.nn.sigmoid(gates[:, 3])
+    c2 = f * c_ref[...].astype(jnp.float32) + i * g
+    h_out[...] = (o * jnp.tanh(c2)).astype(h_out.dtype)
+    c_out[...] = c2.astype(c_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b", "block_h"))
+def lstm_cell_pallas(x, h, c, w_ih, w_hh, b, interpret: bool = False,
+                     block_b: int = 128, block_h: int = 128):
+    """x (B, I); h, c (B, H); w_ih (I, 4H); w_hh (H, 4H); b (4H,)."""
+    B, I = x.shape
+    H = h.shape[1]
+    bb = min(block_b, B)
+    bh = min(block_h, H)
+    assert B % bb == 0 and H % bh == 0, (B, bb, H, bh)
+    wih3 = w_ih.reshape(I, 4, H)
+    whh3 = w_hh.reshape(H, 4, H)
+    b2 = b.reshape(4, H)
+
+    grid = (B // bb, H // bh)
+    out_shape = (jax.ShapeDtypeStruct((B, H), h.dtype),
+                 jax.ShapeDtypeStruct((B, H), c.dtype))
+    h2, c2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, I), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((I, 4, bh), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((H, 4, bh), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, bh), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, c, wih3, whh3, b2)
+    return h2, c2

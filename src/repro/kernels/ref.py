@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations: kernels are validated against
+them with ``assert_allclose`` over shape/dtype sweeps (tests/test_kernels.py),
+and they are also the CPU execution path (``ops.py`` dispatches on backend).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# fused LSTM cell (RevPred hot spot)
+# ---------------------------------------------------------------------------
+
+
+def lstm_cell_ref(x, h, c, w_ih, w_hh, b):
+    """One LSTM step.  x (B, I); h, c (B, H); w_ih (I, 4H); w_hh (H, 4H);
+    b (4H,).  Gate order: i, f, g, o.  Returns (h', c')."""
+    gates = x @ w_ih + h @ w_hh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c2 = f * c + i * g
+    h2 = o * jnp.tanh(c2)
+    return h2, c2
+
+
+# ---------------------------------------------------------------------------
+# flash attention (see models/attention.py for layout docs)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale=None):
+    """q (B,Sq,H,D); k,v (B,Sk,H,D) — plain softmax attention oracle."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk kernel (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunk_ref(x, dt, A, B_in, C_in, state):
+    """One SSD chunk with incoming state (the body the Pallas kernel tiles).
+
+    x (B,Q,H,P); dt (B,Q,H); A (H,); B_in/C_in (B,Q,H,N); state (B,H,P,N).
+    Returns (y (B,Q,H,P), new_state).
+    """
+    from repro.models.ssd import _chunk_scan_step
+
+    new_state, y = _chunk_scan_step(
+        state.astype(jnp.float32),
+        (x.astype(jnp.float32), dt.astype(jnp.float32),
+         B_in.astype(jnp.float32), C_in.astype(jnp.float32)),
+        A.astype(jnp.float32))
+    return y, new_state

@@ -1,0 +1,80 @@
+"""Mamba2 SSD chunk Pallas kernel (TPU target).
+
+Computes ONE chunk of the state-space-duality recurrence per (batch, head)
+grid cell — the quadratic intra-chunk dual form plus the inter-chunk state
+injection — entirely in VMEM:
+
+    y      = (tril(exp(cum_i − cum_j)) ⊙ (C·Bᵀ) ⊙ dt_j) · x̄
+             + (C ⊙ exp(cum)) · state
+    state' = exp(cum_Q) · state + Σ_j exp(cum_Q − cum_j) · x̄_j ⊗ B_j
+
+VMEM budget per cell at (Q=256, P=64, N=128): the (Q, Q) decay/score tile is
+256 KiB fp32, x/B/C tiles ≤ 128 KiB, state 32 KiB — comfortably within the
+~16 MiB/core budget, with the (Q,·) matmuls MXU-shaped.  The chunk loop
+itself stays a lax.scan in ops.ssd_chunk's caller (models/ssd.py); the
+kernel is the per-chunk hot body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s_ref, y_ref, s_out):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0].astype(jnp.float32)                 # ()
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    state = s_ref[0, 0].astype(jnp.float32)          # (P, N)
+
+    Q = x.shape[0]
+    a = dt * A                                       # (Q,) log-decays (<= 0)
+    cum = jnp.cumsum(a)
+    seg = cum[:, None] - cum[None, :]                # (Qi, Qj)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ()))) * decay
+    xbar = x * dt[:, None]
+    y = jax.lax.dot_general(scores * 1.0, xbar, (((1,), (0,)), ((), ())))
+    y = y + jax.lax.dot_general(Cm * jnp.exp(cum)[:, None], state,
+                                (((1,), (1,)), ((), ())))
+    w = jnp.exp(cum[-1] - cum)                       # (Q,)
+    s_new = state * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xbar * w[:, None], Bm, (((0,), (0,)), ((), ())))
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    s_out[0, 0] = s_new.astype(s_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(x, dt, A, B_in, C_in, state, interpret: bool = False):
+    """x (B,Q,H,P); dt (B,Q,H); A (H,); B_in/C_in (B,Q,H,N); state (B,H,P,N).
+    Returns (y (B,Q,H,P) fp32, new_state (B,H,P,N) fp32)."""
+    Bb, Q, H, P = x.shape
+    N = B_in.shape[-1]
+    out_shape = (jax.ShapeDtypeStruct((Bb, Q, H, P), jnp.float32),
+                 jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32))
+    y, s_new = pl.pallas_call(
+        _kernel,
+        grid=(Bb, H),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1,), lambda b, h: (h,)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, dt, A, B_in, C_in, state)
+    return y, s_new

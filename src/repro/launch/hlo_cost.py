@@ -1,0 +1,282 @@
+"""Loop-aware HLO cost extraction.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, so anything
+under ``lax.scan`` (layer stacks, KV-chunk flash loops, SSD chunk loops, the
+chunked-xent loop) is undercounted by its trip count.  The post-optimization
+HLO annotates ``backend_config={"known_trip_count":{"n":...}}``, so this
+module re-derives exact module-level costs by walking the call graph:
+
+  * flops: every ``dot`` (2·|out|·|contraction|), multiplied through
+    enclosing while trip counts;
+  * bytes: per materialized instruction, operands + result (fusion bodies
+    are NOT entered — the fusion call site's I/O is exactly XLA's HBM
+    traffic model);
+  * collective bytes per kind (+ ring-model per-device link bytes), also
+    trip-count-aware.
+
+Used by launch/dryrun.py; validated in tests/test_hlo_cost.py against known
+matmul/scan programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    args_str: str
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def _split_type_and_rest(s: str) -> Tuple[str, str]:
+    """s starts right after ' = '.  Returns (type_str, rest)."""
+    s = s.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[: i + 1], s[i + 1:].lstrip()
+    i = s.find(" ")
+    return s[:i], s[i + 1:].lstrip()
+
+
+def _split_args(s: str) -> Tuple[str, str]:
+    """s starts at '('.  Returns (inside_parens, attrs_after)."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return s[1:i], s[i + 1:]
+    return s, ""
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{$", line)
+            if m and " = " not in line:
+                cur = Computation(m.group(1), [])
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$", line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, rest = _split_type_and_rest(rest)
+        om = re.match(r"([\w\-]+)", rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        rest = rest[len(opcode):].lstrip()
+        if rest.startswith("("):
+            args, attrs = _split_args(rest)
+        else:
+            args, attrs = "", rest
+        cur.instrs.append(Instr(name, type_str, opcode, args, attrs))
+    return comps
+
+
+def _dot_flops(ins: Instr, shape_table: Dict[str, str]) -> float:
+    out_dims = _first_shape_dims(ins.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # lhs shape: first typed operand in args, else table lookup
+    ops = ins.args_str.split(",")
+    lhs_type = None
+    m = _SHAPE_RE.search(ops[0]) if ops else None
+    if m:
+        lhs_type = ops[0]
+    else:
+        nm = re.search(r"%([\w.\-]+)", ops[0] if ops else "")
+        if nm and nm.group(1) in shape_table:
+            lhs_type = shape_table[nm.group(1)]
+    if lhs_type is None:
+        return 2.0 * out_n  # degenerate fallback
+    lhs_dims = _first_shape_dims(lhs_type)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    contraction = 1
+    if cm:
+        for d in cm.group(1).split(","):
+            if d:
+                contraction *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    return 2.0 * out_n * contraction
+
+
+def _trip_count(ins: Instr) -> int:
+    m = re.search(r'known_trip_count=?\{"?n"?[:=]"?(\d+)"?\}', ins.attrs)
+    if m:
+        return int(m.group(1))
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _called_comps(ins: Instr) -> List[str]:
+    names = []
+    for key in ("body=", "condition=", "calls=", "branch_computations={",
+                "to_apply="):
+        for m in re.finditer(re.escape(key) + r"%?([\w.\-]+)", ins.attrs):
+            names.append(m.group(1))
+    return names
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            slot = self.collectives.setdefault(
+                k, {"count": 0.0, "bytes": 0.0, "ring_bytes": 0.0})
+            for f in slot:
+                slot[f] += v[f] * mult
+
+
+def _group_size(ins: Instr, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", ins.attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.attrs)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+def module_cost(text: str, n_devices: int = 1) -> Cost:
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.instrs))
+    memo: Dict[str, Cost] = {}
+    fusion_bodies = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.opcode == "fusion":
+                for n in _called_comps(ins):
+                    fusion_bodies.add(n)
+
+    def comp_cost(comp: Computation) -> Cost:
+        if comp.name in memo:
+            return memo[comp.name]
+        shape_table = {i.name: i.type_str for i in comp.instrs}
+        cost = Cost()
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast"):
+                continue
+            # I/O bytes at this call site (fusion = XLA's HBM traffic unit)
+            cost.bytes += _type_bytes(ins.type_str) + _type_bytes(ins.args_str)
+            if op == "dot":
+                cost.flops += _dot_flops(ins, shape_table)
+            elif op in ("exponential", "tanh", "log", "rsqrt", "power"):
+                cost.transcendentals += 1
+            base = op[:-6] if op.endswith("-start") else op
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute", "ragged-all-to-all"):
+                nbytes = _type_bytes(ins.type_str)
+                if op.endswith("-start") and ins.type_str.startswith("("):
+                    nbytes = nbytes / 2  # start op type = (operand, result)
+                g = _group_size(ins, n_devices)
+                frac = (g - 1) / g if g > 1 else 1.0
+                ring = {"all-reduce": 2 * nbytes * frac,
+                        "all-gather": nbytes * frac,
+                        "reduce-scatter": nbytes * frac,
+                        "all-to-all": nbytes * frac,
+                        "ragged-all-to-all": nbytes * frac,
+                        "collective-permute": nbytes}[base]
+                slot = cost.collectives.setdefault(
+                    base, {"count": 0.0, "bytes": 0.0, "ring_bytes": 0.0})
+                slot["count"] += 1
+                slot["bytes"] += nbytes
+                slot["ring_bytes"] += ring
+            if op == "while":
+                trip = _trip_count(ins)
+                for cn in _called_comps(ins):
+                    if cn in comps:
+                        cost.add(comp_cost(comps[cn]), mult=trip)
+            elif op == "fusion":
+                # dots can live inside fusions on some backends: count flops
+                for cn in _called_comps(ins):
+                    if cn in comps:
+                        sub = comp_cost(comps[cn])
+                        cost.flops += sub.flops
+                        cost.add(Cost(collectives=sub.collectives))
+            elif op in ("call", "conditional", "custom-call", "map", "reduce",
+                        "sort", "scatter", "reduce-window", "select-and-scatter"):
+                for cn in _called_comps(ins):
+                    if cn in comps and cn not in fusion_bodies:
+                        cost.add(comp_cost(comps[cn]))
+        memo[comp.name] = cost
+        return cost
+
+    return comp_cost(entry)

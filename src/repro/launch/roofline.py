@@ -1,0 +1,146 @@
+"""Three-term roofline analysis from the dry-run artifacts.
+
+Per (arch × shape × mesh), using TPU v5e constants:
+
+    compute    = HLO_FLOPs            / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes            / (chips × 819e9 B/s HBM)
+    collective = collective_bytes     / (chips × 50e9 B/s link)
+
+HLO_FLOPs / HLO_bytes / collective_bytes come from the loop-aware HLO walk
+(launch/hlo_cost.py) over the compiled SPMD module.  Those are *per-device*
+quantities (the SPMD module is the per-device program), so the per-chip
+terms divide by the rates directly; the (chips×…) normalization in the
+formulas above is applied to the device-summed totals — both are reported.
+
+Also derived: MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve), the
+useful-compute ratio MODEL/HLO (catches remat & causal-waste overhead), the
+dominant term, and a roofline fraction = MODEL_FLOPS_time / max(term)
+(how close the cell could get to pure-compute at peak).
+
+CPU-backend caveats (documented in EXPERIMENTS.md): XLA:CPU promotes most
+bf16 arithmetic to f32, inflating byte/collective sizes up to 2x vs the TPU
+lowering; `bf16_corrected` halves f32 collective bytes as the TPU-equivalent
+estimate and is reported alongside the raw number.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def load_artifacts(mesh: str = "single") -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART_DIR, mesh, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def analyze(art: dict) -> Optional[dict]:
+    if art.get("skipped") or art.get("error"):
+        return None
+    chips = art["n_devices"]
+    flops_dev = art["hlo_flops_per_device"]
+    bytes_dev = art["hlo_bytes_per_device"]
+    coll_dev = art["collective_bytes_total"]
+    ring_dev = art["collective_ring_bytes"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    t_coll_ring = ring_dev / LINK_BW
+
+    model_fl = art["model_flops"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # ideal time: train/prefill are compute-normalized (6/2·N·D at peak);
+    # decode is inherently bandwidth-bound — its ideal is one sweep of the
+    # per-device arguments (weights + cache) through HBM.
+    if art["kind"] == "decode":
+        t_model = art["memory"]["argument_size_in_bytes"] / HBM_BW
+    else:
+        t_model = model_fl / (chips * PEAK_FLOPS)
+    return {
+        "arch": art["arch"],
+        "shape": art["shape"],
+        "mesh": art.get("mesh_name", "single"),
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "t_collective_ring_s": t_coll_ring,
+        "dominant": dominant,
+        "model_flops": model_fl,
+        "hlo_flops_total": flops_dev * chips,
+        "useful_ratio": model_fl / max(flops_dev * chips, 1.0),
+        "t_model_ideal_s": t_model,
+        "roofline_fraction": t_model / max(bound, 1e-12),
+        "hbm_gib": art["memory"]["hbm_estimate_bytes"] / 2 ** 30,
+        "collectives": art["collectives"],
+    }
+
+
+def table(mesh: str = "single") -> List[dict]:
+    rows = []
+    for art in load_artifacts(mesh):
+        r = analyze(art)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def format_table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':18s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>5s} {'MODEL/HLO':>9s} {'roofline%':>9s} "
+           f"{'HBM GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:18s} {r['shape']:12s} {r['t_compute_s']:9.3e} "
+            f"{r['t_memory_s']:9.3e} {r['t_collective_s']:9.3e} "
+            f"{r['dominant'][:4]:>5s} {r['useful_ratio']:9.3f} "
+            f"{100 * r['roofline_fraction']:8.1f}% {r['hbm_gib']:8.2f}")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_targets(rows: List[dict]) -> Dict[str, dict]:
+    """worst roofline fraction / most collective-bound / paper-representative
+    (the e2e HPT example trains qwen1.5-0.5b — its train cell)."""
+    candidates = [r for r in rows if r["roofline_fraction"] > 0]
+    worst = min(candidates, key=lambda r: r["roofline_fraction"])
+    coll = max(candidates, key=lambda r: r["t_collective_s"] /
+               max(r["t_compute_s"], 1e-12))
+    rep = next((r for r in rows if r["arch"] == "qwen1.5-0.5b"
+                and r["shape"] == "train_4k"), rows[0])
+    return {"worst_fraction": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = table(args.mesh)
+    print(format_table(rows))
+    print()
+    targets = pick_hillclimb_targets(rows)
+    for k, r in targets.items():
+        print(f"{k}: {r['arch']} x {r['shape']} (dominant={r['dominant']}, "
+              f"roofline={100*r['roofline_fraction']:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

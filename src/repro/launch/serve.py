@@ -1,0 +1,65 @@
+"""Serving driver: prefill + batched greedy decode on any mesh.
+
+The inference-side counterpart of launch/train.py: one jit'd prefill and one
+jit'd single-token decode step (donated cache), driven by a host loop.  On
+the production meshes this is exactly the program the decode_32k/long_500k
+dry-run cells compile; on CPU it serves the reduced configs for tests and
+examples.
+
+The SpotTune connection: MArk-style transient serving (paper §VI-B) falls
+out of the same machinery — a Server's cache+params checkpoint can be
+re-deployed across slices with launch/elastic.py, though the paper scopes
+SpotTune itself to HPT training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.context import ModelCtx, null_ctx
+from repro.models.model import Model
+
+
+class Server:
+    """Batched greedy-decoding server for one model."""
+
+    def __init__(self, cfg, params, ctx: Optional[ModelCtx] = None,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.ctx = ctx or null_ctx(attn_chunk=min(512, max_len), remat="none")
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl, cache_len=max_len))
+        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+
+    def _prefill_impl(self, params, batch, cache_len):
+        return self.model.prefill(params, batch, self.ctx, cache_len=cache_len)
+
+    def _step_impl(self, params, cache, tokens, pos):
+        logits, cache = self.model.decode_step(params, cache, tokens, pos,
+                                               self.ctx)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    def generate(self, batch: dict, max_new_tokens: int = 32):
+        """batch: prefill inputs ({'tokens': (B, S_prompt), ...}).
+        Returns (B, max_new_tokens) int32 greedy continuations."""
+        prompt_len = batch["tokens"].shape[1]
+        if self.cfg.family == "vlm":
+            prompt_len += self.cfg.n_patches
+        assert prompt_len + max_new_tokens <= self.max_len, (
+            prompt_len, max_new_tokens, self.max_len)
+        logits, cache = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for i in range(max_new_tokens - 1):
+            tok, cache = self._step(self.params, cache,
+                                    tok, jnp.int32(prompt_len + i))
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

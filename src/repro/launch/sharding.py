@@ -1,0 +1,309 @@
+"""Divisibility-aware sharding policy.
+
+Maps every parameter / activation / cache tensor to a PartitionSpec given the
+mesh, with fallback chains when a preferred dim doesn't divide the axis
+(e.g. GQA kv=8 heads on a 16-way model axis -> shard head_dim instead).
+
+Conventions (DESIGN.md §3):
+  * params: TP dim over `model`, FSDP dim over `data` (never over `pod` —
+    cross-pod stays pure DP);  optimizer moments/master mirror the param spec;
+  * train/prefill residual stream: batch over data axes, sequence over
+    `model` (Megatron sequence parallelism);
+  * decode: batch over data axes when divisible; caches KV-head-sharded when
+    possible, else sequence-sharded with the LSE-combine decode
+    (ctx.decode_attn = 'distributed').
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.context import ModelCtx
+from repro.models.moe import moe_weight_specs
+from repro.launch.mesh import data_axes_of, model_axis_of
+
+STACK_KEYS = ("layers", "moe_layers", "dense_layers", "mamba_layers",
+              "enc_layers", "dec_layers", "lstm")
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+class Policy:
+    def __init__(self, cfg, mesh, shape_kind: str = "train",
+                 global_batch: Optional[int] = None,
+                 dp_only_threshold: float = 1e9):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.kind = shape_kind
+        self.data_axes = data_axes_of(mesh)
+        self.model_axis = model_axis_of(mesh)
+        self.dsize = int(np.prod([mesh.shape[a] for a in self.data_axes]))
+        self.msize = mesh.shape[self.model_axis]
+        self.fsdp_axis = "data" if "data" in mesh.axis_names else None
+        self.fsdp_size = mesh.shape.get("data", 1)
+
+        # §Perf iteration 2: models under ~1B params are pure communication
+        # when tensor-sharded across a 16-way model axis — replicate their
+        # weights and spend every mesh axis on batch (or batch x sequence
+        # when the batch doesn't cover the mesh).  Collectives then collapse
+        # to the gradient all-reduce.
+        self.dp_only = (shape_kind in ("train", "prefill")
+                        and cfg.param_count() < dp_only_threshold)
+        if self.dp_only:
+            self.fsdp_axis = None
+            full = self.dsize * self.msize
+            if global_batch is not None and global_batch % full == 0:
+                self.data_axes = tuple(mesh.axis_names)
+                self.dsize = full
+                self._dp_seq_axis = None
+            else:
+                self._dp_seq_axis = self.model_axis
+        else:
+            self._dp_seq_axis = None
+
+    # ------------------------------------------------------------- helpers
+    def _fsdp(self, dim: int) -> Optional[str]:
+        return self.fsdp_axis if _div(dim, self.fsdp_size) else None
+
+    def _tp(self, dim: int) -> Optional[str]:
+        return self.model_axis if _div(dim, self.msize) else None
+
+    def mm_spec(self, shape, tp_dim: int) -> P:
+        """2-D matmul weight: TP on ``tp_dim``, FSDP on the other."""
+        other = 1 - tp_dim
+        spec = [None, None]
+        spec[tp_dim] = self._tp(shape[tp_dim])
+        spec[other] = self._fsdp(shape[other])
+        return P(*spec)
+
+    # ------------------------------------------------------- param policy
+    def param_spec(self, path: str, shape) -> P:
+        """PartitionSpec for one param leaf.  ``path`` is the keystr."""
+        if self.dp_only:
+            return P(*([None] * len(shape)))
+        stacked = any(f"['{k}']" in path for k in STACK_KEYS)
+        core = self._param_spec_core(path, shape[1:] if stacked else shape)
+        return P(None, *core) if stacked else core
+
+    def _param_spec_core(self, path: str, shape) -> P:
+        cfg = self.cfg
+        m = self.model_axis
+
+        if ("moe" in path and "['shared']" not in path
+                and re.search(r"\['(w_gate|w_up|w_down|router)'\]", path)):
+            strategy = cfg.moe_sharding
+            if strategy in ("auto", "ep"):
+                strategy = "ep" if _div(cfg.n_experts, self.msize) else "tp"
+            specs = moe_weight_specs(cfg, strategy, m, self.fsdp_axis)
+            name = re.search(r"\['(w_gate|w_up|w_down|router)'\]", path).group(1)
+            full = specs[name]
+            # moe_weight_specs already includes the stacked leading None
+            sub = P(*full[1:])
+            return self._check(sub, shape)
+
+        rules = [
+            # token table: D over model, vocab REPLICATED — a vocab- or
+            # fsdp-sharded table turns the gather into an all-batch
+            # gather+mask+psum (O(B·S·D) f32 intermediates per device)
+            (r"\['embed'\]\['tok'\]", lambda s: P(None, self._tp(s[1]))),
+            (r"\['embed'\]\['pos'\]", lambda s: P(None, self._tp(s[1]))),
+            (r"\['enc_pos'\]", lambda s: P(None, self._tp(s[1]))),
+            (r"\['unembed'\]", lambda s: self.mm_spec(s, 1)),
+            (r"\['(wq|wk|wv|w_gate|w_up|wq_b)'\]$", lambda s: self.mm_spec(s, 1)),
+            (r"\['(wo|w_down)'\]$", lambda s: self.mm_spec(s, 0)),
+            (r"\['wq_a'\]$", lambda s: self.mm_spec(s, 1)),
+            (r"\['wkv_a'\]$", lambda s: self.mm_spec(s, 1)),
+            (r"\['(wkv_b_k|wkv_b_v)'\]$",
+             lambda s: P(self._fsdp(s[0]), self._tp(s[1]), None)),
+            (r"\['(wz|wx)'\]$", lambda s: self.mm_spec(s, 1)),
+            (r"\['(wB|wC|wdt)'\]$", lambda s: P(self._fsdp(s[0]), None)),
+            (r"\['conv_(x|B|C)'\]\['w'\]", lambda s: P(self._tp(s[0]), None)),
+            (r"\['conv_(x|B|C)'\]\['b'\]", lambda s: P(self._tp(s[0]))),
+            (r"\['(w_ih|w_hh)'\]$", lambda s: self.mm_spec(s, 1)),
+        ]
+        for pat, fn in rules:
+            if re.search(pat, path):
+                return self._check(fn(shape), shape)
+        # norms, biases, scalars, gates: replicate
+        return P(*([None] * len(shape)))
+
+    def _check(self, spec: P, shape) -> P:
+        out = []
+        for i, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if ax is None:
+                out.append(None)
+            else:
+                size = self.mesh.shape[ax] if isinstance(ax, str) else int(
+                    np.prod([self.mesh.shape[a] for a in ax]))
+                out.append(ax if _div(shape[i], size) else None)
+        return P(*out)
+
+    def param_shardings(self, param_shapes):
+        """pytree of NamedSharding matching an eval_shape'd param tree."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+        out = []
+        for path, leaf in flat:
+            spec = self.param_spec(jax.tree_util.keystr(path), leaf.shape)
+            out.append(NamedSharding(self.mesh, spec))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def opt_state_shardings(self, opt_shapes, param_shardings):
+        """Moments/master mirror the param spec; scalars replicate."""
+        pflat = {jax.tree_util.keystr(p): s for p, s in
+                 jax.tree_util.tree_flatten_with_path(param_shardings)[0]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+        out = []
+        for path, leaf in flat:
+            ks = jax.tree_util.keystr(path)
+            # strip the leading ['m'] / ['v'] / ['master'] component
+            stripped = re.sub(r"^\['(m|v|master)'\]", "", ks)
+            if stripped in pflat:
+                out.append(pflat[stripped])
+            else:
+                out.append(NamedSharding(self.mesh, P(*([None] * len(leaf.shape)))))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------- activations / rules
+    def ctx(self, decode: bool = False, batch: Optional[int] = None) -> ModelCtx:
+        cfg = self.cfg
+        B_axes = self.data_axes
+        m = self.model_axis
+        rules = {}
+        if not decode:
+            rules["residual"] = P(B_axes, m, None)
+            rules["logits"] = P(B_axes, None, m)      # prefill last-pos logits
+            rules["logits_sp"] = P(B_axes, m, None)   # train loss: S-sharded, V-local
+        else:
+            rules["residual"] = P(B_axes, None, None)
+            rules["logits"] = P(B_axes, None, m)
+
+        # attention activations (train/prefill): KV heads over model when they
+        # divide; else EXPAND — duplicate KV to the full H heads and shard H
+        # (Megatron GQA-under-TP; the per-shard kv copies are only the shard's
+        # own heads, so no memory is wasted).  head_dim sharding is never
+        # used here: contracting Dh over model all-reduces full (Sq, chunk)
+        # score tiles per layer.  Nothing divides (whisper H=8 < 16):
+        # replicate heads — attention is compute-duplicated over the model
+        # axis, fine for a d_model=512 stack (noted in DESIGN.md).
+        if cfg.n_heads:
+            kv, h = cfg.n_kv_heads, cfg.n_heads
+            if _div(kv, self.msize):
+                rules["attn_mode"] = "kv"
+                rules["attn_q"] = P(B_axes, None, m, None, None)
+                rules["attn_kv"] = P(B_axes, None, m, None)
+            elif _div(h, self.msize):
+                rules["attn_mode"] = "expand"
+                rules["attn_q4"] = P(B_axes, None, m, None)
+                rules["attn_kv4"] = P(B_axes, None, m, None)
+            else:
+                rules["attn_mode"] = "replicate"
+        if cfg.ssm_state:
+            h, p = cfg.ssm_nheads, cfg.ssm_headdim
+            if _div(h, self.msize):
+                rules["ssm_x"] = P(B_axes, None, m, None)
+            elif _div(p, self.msize):
+                rules["ssm_x"] = P(B_axes, None, None, m)
+
+        if self.dp_only and not decode:
+            seq = self._dp_seq_axis
+            rules = {
+                "residual": P(B_axes, seq, None),
+                "logits": P(B_axes, seq, None),
+                "logits_sp": P(B_axes, seq, None),
+                "attn_mode": "replicate",
+            }
+
+        plan = self.decode_plan(batch) if decode else None
+        return ModelCtx(
+            mesh=self.mesh, rules=rules, data_axes=self.data_axes,
+            fsdp_axis=self.fsdp_axis, model_axis=m,
+            remat="none" if decode else "full",
+            decode_attn=(plan.mode if plan else "local"),
+            decode_plan=plan,
+        )
+
+    def decode_plan(self, batch: Optional[int]):
+        """How to lay out decode KV caches (see module docstring).
+
+        Preference order: shard batch over data + KV heads (or head_dim)
+        over model -> plain local decode.  When batch or KV can't shard, the
+        sequence dim takes the free axes and decode runs the distributed
+        LSE-combine path."""
+        cfg = self.cfg
+        m = self.model_axis
+        b_axes = self.data_axes if (batch and _div(batch, self.dsize)) else None
+        if cfg.use_mla:
+            # compressed MQA-style cache: no KV-head dim; always seq-shard
+            seq = (m,) if b_axes else tuple(self.data_axes) + (m,)
+            return DecodePlan(b_axes, None, seq, "distributed")
+        kv_axis = (m if _div(cfg.n_kv_heads, self.msize)
+                   else ("HD" if _div(cfg.head_dim, self.msize) else None))
+        if b_axes and kv_axis:
+            return DecodePlan(b_axes, kv_axis, (), "local")
+        if kv_axis:  # batch un-shardable (long_500k B=1): seq over data
+            return DecodePlan(None, kv_axis, tuple(self.data_axes), "distributed")
+        if b_axes:
+            return DecodePlan(b_axes, None, (m,), "distributed")
+        return DecodePlan(None, None, tuple(self.data_axes) + (m,), "distributed")
+
+    # ----------------------------------------------------- batches / caches
+    def batch_shardings(self, batch_shapes):
+        def spec(path, leaf):
+            b = leaf.shape[0] if leaf.ndim else 0
+            ba = self.data_axes if _div(b, self.dsize) else None
+            return NamedSharding(self.mesh, P(ba, *([None] * (leaf.ndim - 1)))
+                                 if leaf.ndim else P())
+
+        return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+    def cache_shardings(self, cache_shapes, plan: "DecodePlan"):
+        """Decode caches.  Leaves are stacked (L, B, S, ...) or (L, B, ...)."""
+        m = self.model_axis
+        cfg = self.cfg
+        B_axes = plan.b_axes
+        seq = plan.seq_axes if plan.seq_axes else None
+
+        def spec(path, leaf):
+            ks = jax.tree_util.keystr(path)
+            nd = leaf.ndim
+            if nd >= 4 and re.search(r"\['(k|v|xk|xv)'\]$", ks):
+                # (L, B, S, KV, Dh) attention cache
+                kv_sp = plan.kv_axis if plan.kv_axis != "HD" else None
+                hd_sp = m if plan.kv_axis == "HD" else None
+                return NamedSharding(self.mesh, P(None, B_axes, seq, kv_sp, hd_sp))
+            if re.search(r"\['(c_kv|k_rope)'\]$", ks):
+                # (L, B, S, R) compressed MLA cache: sequence-sharded
+                return NamedSharding(self.mesh, P(None, B_axes, seq, None))
+            if re.search(r"\['state'\]$", ks):
+                # (L, B, H, P, N) SSM state
+                h, pd = cfg.ssm_nheads, cfg.ssm_headdim
+                if _div(h, self.msize):
+                    return NamedSharding(self.mesh, P(None, B_axes, m, None, None))
+                if _div(pd, self.msize):
+                    return NamedSharding(self.mesh, P(None, B_axes, None, m, None))
+                return NamedSharding(self.mesh, P(None, B_axes, None, None, None))
+            if re.search(r"\['conv_(x|B|C)'\]$", ks):
+                ch = leaf.shape[-1]
+                tp = m if _div(ch, self.msize) else None
+                return NamedSharding(self.mesh, P(None, B_axes, None, tp))
+            return NamedSharding(self.mesh, P(*([None] * nd)))
+
+        return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    b_axes: Optional[tuple]        # batch dim axes, or None (replicated)
+    kv_axis: Optional[str]         # 'model' | 'HD' (head_dim over model) | None
+    seq_axes: tuple                # axes sharding the cache sequence dim
+    mode: str                      # 'local' | 'distributed'

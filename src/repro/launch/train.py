@@ -1,0 +1,117 @@
+"""Training driver: train_step builder (shared by dry-run and real runs) and
+a CPU-runnable Trainer used by the HPT examples and the RealTrialBackend.
+
+The train step is one pjit'd program: loss (vocab-sharded xent + MoE aux) →
+grads → clip → AdamW update.  Fault tolerance comes from the checkpoint
+manager (atomic manifests) + the deterministic data pipeline: restore(step)
+replays the exact stream.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import SyntheticLMDataset, prefetch
+from repro.models.context import ModelCtx, null_ctx
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.optim.optimizers import Optimizer
+
+
+def make_train_step(model: Model, optimizer: Optimizer, ctx: ModelCtx) -> Callable:
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, ctx)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state["opt"], state["params"])
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, **metrics, **opt_metrics})
+
+    return train_step
+
+
+def init_state(model: Model, optimizer: Optimizer, seed: int = 0):
+    params = jax.jit(model.init)(jax.random.key(seed))
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+class Trainer:
+    """Small real-training loop (CPU-scale configs) with checkpoint/restart.
+
+    Used by examples/ and core.trial.RealTrialBackend: SpotTune treats one
+    Trainer as one HPT trial; ``run_steps`` advances it and returns the
+    validation metrics stream the Orchestrator/EarlyCurve consume.
+    """
+
+    def __init__(self, cfg, batch: int, seq: int, lr: float = 3e-3,
+                 lr_schedule=None, seed: int = 0,
+                 ckpt: Optional[CheckpointManager] = None,
+                 val_every: int = 10, ctx: Optional[ModelCtx] = None):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.optimizer = adamw(lr_schedule if lr_schedule is not None else lr,
+                               keep_master=(cfg.opt_precision == "fp32"))
+        self.ctx = ctx or null_ctx(attn_chunk=min(512, seq), remat="none")
+        self.data = SyntheticLMDataset(cfg, batch, seq, seed=seed)
+        self.step_fn = jax.jit(make_train_step(self.model, self.optimizer, self.ctx),
+                               donate_argnums=(0,))
+        self.state = init_state(self.model, self.optimizer, seed)
+        self.step = 0
+        self.ckpt = ckpt
+        self.val_every = val_every
+        self.metrics_steps: list = []
+        self.metrics_vals: list = []
+        self.step_seconds: list = []
+
+    def run_steps(self, n: int):
+        """Advance n steps; returns newly recorded (step, val_loss) points."""
+        new_points = []
+        for _ in range(n):
+            batch = self.data.get_batch(self.step)
+            t0 = time.perf_counter()
+            self.state, m = self.step_fn(self.state, batch)
+            loss = float(m["loss"])
+            self.step_seconds.append(time.perf_counter() - t0)
+            self.step += 1
+            if self.step % self.val_every == 0:
+                self.metrics_steps.append(self.step)
+                self.metrics_vals.append(loss)
+                new_points.append((self.step, loss))
+            if self.ckpt and self.ckpt.should_save(self.step):
+                self.save()
+        return new_points
+
+    # ------------------------------------------------------- checkpointing
+    def save(self, blocking: bool = True):
+        assert self.ckpt is not None
+        meta = {"metrics_steps": self.metrics_steps,
+                "metrics_vals": self.metrics_vals}
+        self.ckpt.save(self.step, self.state, blocking=blocking, extra_meta=meta)
+
+    def restore(self, sharding_fn=None):
+        assert self.ckpt is not None
+        like = jax.tree.map(lambda x: x, self.state)
+        self.state, step = self.ckpt.restore_latest(like, sharding_fn=sharding_fn)
+        self.step = step
+        import json
+
+        from repro.checkpoint.checkpointer import MANIFEST
+
+        base = f"{self.ckpt.prefix}/step_{step:08d}"
+        meta = json.loads(self.ckpt.store.get(f"{base}/{MANIFEST}").decode())
+        extra = meta.get("extra", {})
+        self.metrics_steps = list(extra.get("metrics_steps", []))
+        self.metrics_vals = list(extra.get("metrics_vals", []))
+        return step
+
+    def mean_step_time(self) -> float:
+        xs = self.step_seconds[2:] or self.step_seconds  # drop compile step
+        return float(np.mean(xs)) if xs else 0.0

@@ -1,0 +1,345 @@
+"""GQA attention: naive reference, chunked-flash (scan) lowering path, decode.
+
+Layouts:
+  q               (B, Sq, KV, G, Dh)   G = n_heads // n_kv_heads
+  k, v            (B, Sk, KV, Dh)
+  scores          (B, KV, G, Sq, Sk)
+
+The chunked path is the one that lowers for train/prefill: a ``lax.scan``
+over KV chunks with an online-softmax (flash) accumulator, so the compiled
+HLO never materializes the (Sq, Sk) score matrix — this is what keeps the
+32k-prefill dry-run within HBM.  The Pallas kernel in ``repro.kernels`` is
+the TPU-native version of the same tiling; ``repro.kernels.ops`` dispatches.
+
+Decode offers two modes:
+  * local: full-cache einsum (cache KV-head- or head-dim-sharded)
+  * distributed: shard_map flash-decode with the cache sequence-sharded and
+    a two-psum log-sum-exp combine (used when KV heads don't divide the model
+    axis or the cache is too big per chip — e.g. zamba2 @ long_500k).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg):
+    dt = layers.dtype_of(cfg)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, h * dh, dt),
+        "wk": layers.dense_init(ks[1], d, kv * dh, dt),
+        "wv": layers.dense_init(ks[2], d, kv * dh, dt),
+        "wo": layers.dense_init(ks[3], h * dh, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((kv * dh,), dt)
+        p["bv"] = jnp.zeros((kv * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(dh)
+        p["k_norm"] = layers.init_rmsnorm(dh)
+    return p
+
+
+def qkv_project(x, params, cfg, positions, rope: bool = True):
+    """x: (B, S, D) -> q (B,S,KV,G,Dh), k,v (B,S,KV,Dh)."""
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, kv, g, dh)
+    k = k.reshape(B, S, kv, dh)
+    v = v.reshape(B, S, kv, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope:
+        qf = q.reshape(B, S, kv * g, dh)
+        qf = layers.apply_rope(qf, positions, cfg.rope_theta)
+        q = qf.reshape(B, S, kv, g, dh)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# reference attention (oracle for tests; also fine for tiny smoke shapes)
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, causal: bool, q_offset: int = 0, scale: Optional[float] = None):
+    """Materialized-scores attention.  q (B,Sq,KV,G,Dh); k,v (B,Sk,KV,Dh)."""
+    B, Sq, KV, G, Dh = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else Dh ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (lax.scan over KV chunks) — the lowering path
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, causal: bool, chunk: int = 1024, q_offset: int = 0,
+                      scale: Optional[float] = None):
+    """Online-softmax attention, O(Sq*chunk) live memory.
+
+    q (B,Sq,KV,G,Dh); k,v (B,Sk,KV,Dh); Sk % chunk == 0 (callers pad).
+    """
+    B, Sq, KV, G, Dh = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    n_chunks = Sk // chunk
+    scale = scale if scale is not None else Dh ** -0.5
+
+    q32 = q.astype(jnp.float32) * scale
+    kc = k.reshape(B, n_chunks, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks) * chunk
+    qpos = jnp.arange(Sq) + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, start = xs
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q32, k_i.astype(jnp.float32))
+        if causal:
+            kpos = start + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, starts))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B, Sq, KV, G, Dh)
+
+
+def _chunked_fwd(q, k, v, causal, chunk, q_offset, scale):
+    """Flash forward that also returns the log-sum-exp (for the custom bwd)."""
+    B, Sq, KV, G, Dh = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    n_chunks = Sk // chunk
+    q32 = q.astype(jnp.float32) * scale
+    kc = k.reshape(B, n_chunks, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks) * chunk
+    qpos = jnp.arange(Sq) + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, start = xs
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q32, k_i.astype(jnp.float32))
+        if causal:
+            kpos = start + jnp.arange(chunk)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                          s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, starts))
+    o = (acc / jnp.maximum(l, 1e-30)[..., None])
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_vjp(q, k, v, causal: bool, chunk: int, q_offset: int,
+                        scale: float):
+    """Flash attention with the real flash backward: the probability matrix
+    is recomputed chunk-by-chunk in the VJP, so neither pass ever holds more
+    than one (Sq, chunk) score tile.  (Differentiating the forward scan
+    directly would stash every chunk's tile — O(Sq·Sk) memory.)"""
+    o, _ = _chunked_fwd(q, k, v, causal, chunk, q_offset, scale)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, causal, chunk, q_offset, scale):
+    o, lse = _chunked_fwd(q, k, v, causal, chunk, q_offset, scale)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, chunk, q_offset, scale, res, do):
+    q, k, v, o, lse = res
+    B, Sq, KV, G, Dh = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    n_chunks = Sk // chunk
+    q32 = q.astype(jnp.float32)
+    do32 = do.astype(jnp.float32).transpose(0, 2, 3, 1, 4)   # (B,KV,G,Sq,Dv)
+    o32 = o.astype(jnp.float32).transpose(0, 2, 3, 1, 4)
+    D = jnp.sum(do32 * o32, axis=-1)                          # (B,KV,G,Sq)
+    kc = k.reshape(B, n_chunks, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks) * chunk
+    qpos = jnp.arange(Sq) + q_offset
+
+    def step(dq_acc, xs):
+        k_i, v_i, start = xs
+        k32, v32 = k_i.astype(jnp.float32), v_i.astype(jnp.float32)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q32 * scale, k32)
+        if causal:
+            kpos = start + jnp.arange(chunk)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                          s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                       # (B,KV,G,Sq,C)
+        dv_i = jnp.einsum("bkgqc,bkgqd->bckd", p, do32)
+        dp = jnp.einsum("bkgqd,bckd->bkgqc", do32, v32)
+        ds = p * (dp - D[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bkgqc,bckd->bqkgd", ds, k32)
+        dk_i = jnp.einsum("bkgqc,bqkgd->bckd", ds, q32)
+        return dq_acc, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((B, Sq, KV, G, Dh), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, starts))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, Dh)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, Dv)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_vjp.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def attention(q, k, v, causal: bool, chunk: int = 1024, q_offset: int = 0,
+              use_chunked: bool = True, scale: Optional[float] = None):
+    if use_chunked and k.shape[1] >= chunk and k.shape[1] % chunk == 0:
+        scale_v = float(scale if scale is not None else q.shape[-1] ** -0.5)
+        return flash_attention_vjp(q, k, v, causal, min(chunk, k.shape[1]),
+                                   q_offset, scale_v)
+    return naive_attention(q, k, v, causal, q_offset, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=None, n_kv: Optional[int] = None,
+               head_dim: Optional[int] = None):
+    """Abstract-friendly cache pytree (works with ShapeDtypeStruct via eval_shape)."""
+    dt = dtype or layers.dtype_of(cfg)
+    kv = n_kv if n_kv is not None else cfg.n_kv_heads
+    dh = head_dim if head_dim is not None else cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, seq_len, kv, dh), dt),
+        "v": jnp.zeros((batch, seq_len, kv, dh), dt),
+    }
+
+
+def cache_update(cache, k_new, v_new, pos):
+    """Insert (B, 1, KV, Dh) at position ``pos`` (scalar int32)."""
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    return {"k": k, "v": v}
+
+
+def decode_attention(q, cache, pos, scale: Optional[float] = None):
+    """Single-token decode over a full local cache.
+
+    q (B, 1, KV, G, Dh); cache k/v (B, S, KV, Dh); pos: scalar — number of
+    valid tokens (cache positions >= pos are masked out).
+    """
+    B, _, KV, G, Dh = q.shape
+    S = cache["k"].shape[1]
+    scale = scale if scale is not None else Dh ** -0.5
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32) * scale, cache["k"].astype(jnp.float32)
+    )
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, cache["v"].astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def distributed_decode_attention(q, k_shard, v_shard, pos, seq_axes,
+                                 shard_start, scale: Optional[float] = None,
+                                 hd_axis: Optional[str] = None):
+    """Flash-decode across a sequence-sharded cache (call inside shard_map).
+
+    q (B,1,KV,G,Dh) replicated over ``seq_axes``; k/v shards (B,S_loc,KV,Dh');
+    shard_start: this shard's first global cache slot.  One pmax + two psums
+    over the sequence axes implement an exact log-sum-exp combine.  When the
+    head_dim is additionally model-sharded (``hd_axis``), the partial scores
+    are psum'd over it before the softmax.
+    """
+    B, _, KV, G, Dh = q.shape
+    S_loc = k_shard.shape[1]
+    scale = scale if scale is not None else Dh ** -0.5
+    if hd_axis is not None:
+        # contraction dim is sharded: full-head scale, partial-sum scores
+        scale = (Dh * jax.lax.psum(1, hd_axis)) ** -0.5 if scale is None else scale
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32) * scale, k_shard.astype(jnp.float32)
+    )
+    if hd_axis is not None:
+        s = jax.lax.psum(s, hd_axis)
+    gpos = shard_start + jnp.arange(S_loc)
+    valid = (gpos <= pos)[None, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_loc = jnp.max(s, axis=-1)                                   # (B,KV,G,1)
+    m_glob = jax.lax.pmax(m_loc, seq_axes)
+    p = jnp.exp(s - m_glob[..., None])
+    l_loc = jnp.sum(p, axis=-1)
+    o_loc = jnp.einsum("bkgqs,bskd->bkgqd", p, v_shard.astype(jnp.float32))
+    l_glob = jax.lax.psum(l_loc, seq_axes)
+    o_glob = jax.lax.psum(o_loc, seq_axes)
+    o = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]   # (B,KV,G,1,Dv)
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)    # (B,1,KV,G,Dv)
+
+
+def seq_shard_start(seq_axes, total_len: int):
+    """Global offset of this shard's sequence slice (inside shard_map)."""
+    idx, shards = 0, 1
+    for a in seq_axes:
+        size = jax.lax.psum(1, a)  # static axis size
+        idx = idx * size + jax.lax.axis_index(a)
+        shards = shards * size
+    return idx * (total_len // shards)
+
+
+def merge_heads(o, cfg):
+    """(B, S, KV, G, Dh) -> (B, S, H*Dh)."""
+    B, S = o.shape[:2]
+    return o.reshape(B, S, cfg.n_kv_heads * (cfg.n_heads // cfg.n_kv_heads) * cfg.head_dim)

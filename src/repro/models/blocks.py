@@ -1,0 +1,309 @@
+"""Block composition: pre-norm transformer / MoE / mamba / enc-dec blocks.
+
+Each block family provides ``init_*``, a full-sequence ``*_fwd`` (train), a
+``*_prefill`` (returns a decode cache) and a ``*_decode`` (one token).
+Blocks are pure functions over per-layer param pytrees — ``model.py`` stacks
+them along a leading L axis and drives them with ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_lib
+from repro.models import layers, mla, moe, ssd
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block (dense GQA or MLA)
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg):
+    if cfg.use_mla:
+        return mla.init_mla(key, cfg)
+    return attn_lib.init_attention(key, cfg)
+
+
+def _sharded_attention(q, k, v, cfg, ctx, causal):
+    """Apply the policy's attention layout (see launch/sharding.py):
+    'kv' shards KV heads; 'expand' duplicates KV to the full H heads and
+    shards H (each shard only holds its own heads' copies); 'replicate'
+    leaves heads unsharded."""
+    mode = ctx.rules.get("attn_mode", "kv")
+    if mode == "expand":
+        B, S, KV, G, Dh = q.shape
+        q4 = ctx.constrain(q.reshape(B, S, KV * G, Dh), "attn_q4")
+        kx = ctx.constrain(jnp.repeat(k, G, axis=2), "attn_kv4")
+        vx = ctx.constrain(jnp.repeat(v, G, axis=2), "attn_kv4")
+        o = attn_lib.attention(q4[:, :, :, None], kx, vx, causal=causal,
+                               chunk=ctx.attn_chunk,
+                               use_chunked=ctx.use_chunked_attn)
+        return o.reshape(B, S, KV, G, Dh)
+    q = ctx.constrain(q, "attn_q")
+    k = ctx.constrain(k, "attn_kv")
+    v = ctx.constrain(v, "attn_kv")
+    return attn_lib.attention(q, k, v, causal=causal, chunk=ctx.attn_chunk,
+                              use_chunked=ctx.use_chunked_attn)
+
+
+def attn_fwd(h, p, cfg, ctx, positions, causal=True):
+    """Normed input -> attention output (full sequence)."""
+    if cfg.use_mla:
+        return mla.mla_train(h, p, cfg, positions, ctx)
+    q, k, v = attn_lib.qkv_project(h, p, cfg, positions)
+    o = _sharded_attention(q, k, v, cfg, ctx, causal)
+    return attn_lib.merge_heads(o, cfg) @ p["wo"]
+
+
+def attn_prefill(h, p, cfg, ctx, positions):
+    if cfg.use_mla:
+        return mla.mla_prefill(h, p, cfg, positions, ctx)
+    q, k, v = attn_lib.qkv_project(h, p, cfg, positions)
+    o = _sharded_attention(q, k, v, cfg, ctx, causal=True)
+    out = attn_lib.merge_heads(o, cfg) @ p["wo"]
+    return out, {"k": k, "v": v}  # cache stays KV-compact
+
+
+def attn_decode(h, p, cfg, ctx, cache, pos):
+    """h (B,1,D); cache {k,v} (B,S,KV,Dh); pos scalar int32."""
+    if cfg.use_mla:
+        return mla.mla_decode(h, p, cfg, cache, pos, ctx)
+    B = h.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = attn_lib.qkv_project(h, p, cfg, positions)
+    cache = attn_lib.cache_update(cache, k_new, v_new, pos)
+    if ctx.decode_attn == "distributed" and ctx.mesh is not None:
+        o = _distributed_decode(q, cache, pos, ctx)
+    else:
+        o = attn_lib.decode_attention(q, cache, pos)
+    return attn_lib.merge_heads(o, cfg) @ p["wo"], cache
+
+
+def _distributed_decode(q, cache, pos, ctx):
+    """shard_map flash-decode over a sequence-sharded KV cache.
+
+    Layout comes from ctx.decode_plan (launch/sharding.py): batch over
+    ``plan.b_axes``, cache sequence over ``plan.seq_axes``, KV heads (or
+    head_dim) over the model axis when divisible."""
+    plan = ctx.decode_plan
+    mesh = ctx.mesh
+    seq = tuple(plan.seq_axes)
+    kv_sp = plan.kv_axis if plan.kv_axis not in (None, "HD") else None
+    hd_sp = ctx.model_axis if plan.kv_axis == "HD" else None
+    qspec = P(plan.b_axes, None, kv_sp, None, hd_sp)
+    cspec = P(plan.b_axes, seq if seq else None, kv_sp, hd_sp)
+    S = cache["k"].shape[1]
+    Dh_full = q.shape[-1]
+
+    def body(q_s, k_s, v_s, pos_s):
+        start = attn_lib.seq_shard_start(seq, S) if seq else 0
+        return attn_lib.distributed_decode_attention(
+            q_s, k_s, v_s, pos_s, seq, start,
+            scale=Dh_full ** -0.5, hd_axis=hd_sp)
+
+    return shard_map(
+        body, mesh=mesh, in_specs=(qspec, cspec, cspec, P()),
+        out_specs=qspec, check_vma=False,
+    )(q, cache["k"], cache["v"], pos)
+
+
+# ---------------------------------------------------------------------------
+# dense / MoE transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg, moe_layer: bool):
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": layers.init_rmsnorm(cfg.d_model),
+        "attn": init_attn(ks[0], cfg),
+        "ln2": layers.init_rmsnorm(cfg.d_model),
+    }
+    if moe_layer:
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                                   layers.dtype_of(cfg))
+    return p
+
+
+def _ffn(x, p, cfg, ctx):
+    """Second half-block: returns (delta, aux_loss)."""
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        return moe.moe_ffn(h, p["moe"], cfg, ctx)
+    return layers.mlp(h, p["mlp"], cfg.gated_mlp), jnp.zeros((), jnp.float32)
+
+
+def block_fwd(x, p, cfg, ctx, positions):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn_fwd(h, p["attn"], cfg, ctx, positions)
+    x = ctx.constrain(x, "residual")
+    delta, aux = _ffn(x, p, cfg, ctx)
+    x = ctx.constrain(x + delta, "residual")
+    return x, aux
+
+
+def block_prefill(x, p, cfg, ctx, positions):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, cache = attn_prefill(h, p["attn"], cfg, ctx, positions)
+    x = ctx.constrain(x + a, "residual")
+    delta, _ = _ffn(x, p, cfg, ctx)
+    x = ctx.constrain(x + delta, "residual")
+    return x, cache
+
+
+def block_decode(x, p, cfg, ctx, cache, pos):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, cache = attn_decode(h, p["attn"], cfg, ctx, cache, pos)
+    x = x + a
+    delta, _ = _ffn(x, p, cfg, ctx)
+    return x + delta, cache
+
+
+# ---------------------------------------------------------------------------
+# mamba block (pre-norm residual around the SSD mixer)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg):
+    return {"ln": layers.init_rmsnorm(cfg.d_model), "mixer": ssd.init_ssd(key, cfg)}
+
+
+def mamba_fwd(x, p, cfg, ctx):
+    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    return ctx.constrain(x + ssd.mamba_block(h, p["mixer"], cfg, ctx), "residual")
+
+
+def mamba_prefill(x, p, cfg, ctx):
+    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, cache = ssd.mamba_prefill(h, p["mixer"], cfg, ctx)
+    return ctx.constrain(x + y, "residual"), cache
+
+
+def mamba_decode(x, p, cfg, ctx, cache):
+    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, cache = ssd.mamba_decode(h, p["mixer"], cfg, cache, ctx)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder / decoder blocks (LayerNorm + non-gated GeLU MLP)
+# ---------------------------------------------------------------------------
+
+
+def init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": layers.init_layernorm(cfg.d_model),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+        "ln2": layers.init_layernorm(cfg.d_model),
+        "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, False, layers.dtype_of(cfg)),
+    }
+
+
+def enc_block_fwd(x, p, cfg, ctx, positions):
+    h = layers.layer_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn_lib.qkv_project(h, p["attn"], cfg, positions, rope=False)
+    o = attn_lib.attention(q, k, v, causal=False, chunk=ctx.attn_chunk,
+                           use_chunked=ctx.use_chunked_attn)
+    x = x + attn_lib.merge_heads(o, cfg) @ p["attn"]["wo"]
+    h = layers.layer_norm(x, p["ln2"], cfg.norm_eps)
+    return ctx.constrain(x + layers.mlp(h, p["mlp"], False), "residual")
+
+
+def init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_layernorm(cfg.d_model),
+        "self_attn": attn_lib.init_attention(ks[0], cfg),
+        "ln_x": layers.init_layernorm(cfg.d_model),
+        "cross_attn": attn_lib.init_attention(ks[1], cfg),
+        "ln2": layers.init_layernorm(cfg.d_model),
+        "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, False, layers.dtype_of(cfg)),
+    }
+
+
+def _cross_kv(enc_out, p, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    B, Se, _ = enc_out.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, Se, kv, dh)
+    v = (enc_out @ p["wv"]).reshape(B, Se, kv, dh)
+    return k, v
+
+
+def dec_block_fwd(x, p, cfg, ctx, positions, enc_out):
+    h = layers.layer_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn_lib.qkv_project(h, p["self_attn"], cfg, positions, rope=False)
+    o = attn_lib.attention(q, k, v, causal=True, chunk=ctx.attn_chunk,
+                           use_chunked=ctx.use_chunked_attn)
+    x = x + attn_lib.merge_heads(o, cfg) @ p["self_attn"]["wo"]
+
+    h = layers.layer_norm(x, p["ln_x"], cfg.norm_eps)
+    B, S, _ = h.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kv
+    qx = (h @ p["cross_attn"]["wq"]).reshape(B, S, kv, g, dh)
+    kx, vx = _cross_kv(enc_out, p["cross_attn"], cfg)
+    o = attn_lib.attention(qx, kx, vx, causal=False, chunk=ctx.attn_chunk,
+                           use_chunked=ctx.use_chunked_attn)
+    x = x + attn_lib.merge_heads(o, cfg) @ p["cross_attn"]["wo"]
+
+    h = layers.layer_norm(x, p["ln2"], cfg.norm_eps)
+    return ctx.constrain(x + layers.mlp(h, p["mlp"], False), "residual")
+
+
+def dec_block_prefill(x, p, cfg, ctx, positions, enc_out):
+    """Returns (x, cache) — self K/V + precomputed cross K/V."""
+    h = layers.layer_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn_lib.qkv_project(h, p["self_attn"], cfg, positions, rope=False)
+    o = attn_lib.attention(q, k, v, causal=True, chunk=ctx.attn_chunk,
+                           use_chunked=ctx.use_chunked_attn)
+    x = x + attn_lib.merge_heads(o, cfg) @ p["self_attn"]["wo"]
+
+    h = layers.layer_norm(x, p["ln_x"], cfg.norm_eps)
+    B, S, _ = h.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kv
+    qx = (h @ p["cross_attn"]["wq"]).reshape(B, S, kv, g, dh)
+    kx, vx = _cross_kv(enc_out, p["cross_attn"], cfg)
+    o = attn_lib.attention(qx, kx, vx, causal=False, chunk=ctx.attn_chunk,
+                           use_chunked=ctx.use_chunked_attn)
+    x = x + attn_lib.merge_heads(o, cfg) @ p["cross_attn"]["wo"]
+
+    h = layers.layer_norm(x, p["ln2"], cfg.norm_eps)
+    x = ctx.constrain(x + layers.mlp(h, p["mlp"], False), "residual")
+    return x, {"k": k, "v": v, "xk": kx, "xv": vx}
+
+
+def dec_block_decode(x, p, cfg, ctx, cache, pos):
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    h = layers.layer_norm(x, p["ln1"], cfg.norm_eps)
+    q, k_new, v_new = attn_lib.qkv_project(h, p["self_attn"], cfg, positions, rope=False)
+    self_cache = attn_lib.cache_update({"k": cache["k"], "v": cache["v"]}, k_new, v_new, pos)
+    o = attn_lib.decode_attention(q, self_cache, pos)
+    x = x + attn_lib.merge_heads(o, cfg) @ p["self_attn"]["wo"]
+
+    h = layers.layer_norm(x, p["ln_x"], cfg.norm_eps)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kv
+    qx = (h @ p["cross_attn"]["wq"]).reshape(B, 1, kv, g, dh)
+    Se = cache["xk"].shape[1]
+    o = attn_lib.decode_attention(qx, {"k": cache["xk"], "v": cache["xv"]}, Se - 1)
+    x = x + attn_lib.merge_heads(o, cfg) @ p["cross_attn"]["wo"]
+
+    h = layers.layer_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.mlp(h, p["mlp"], False)
+    return x, {**self_cache, "xk": cache["xk"], "xv": cache["xv"]}

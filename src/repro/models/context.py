@@ -1,0 +1,58 @@
+"""ModelCtx: mesh + sharding rules + lowering flags threaded through models.
+
+Models never import ``repro.launch`` — the launcher builds a ModelCtx from its
+sharding policy and passes it down.  With ``mesh=None`` (CPU unit tests) every
+constraint/collective degrades to the identity, so the exact same model code
+runs single-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ModelCtx:
+    mesh: Optional[jax.sharding.Mesh] = None
+    # logical-role -> PartitionSpec (see launch/sharding.py for the policy)
+    rules: dict = dataclasses.field(default_factory=dict)
+    data_axes: tuple = ("data",)   # ('pod','data') on the multi-pod mesh
+    fsdp_axis: Optional[str] = "data"
+    model_axis: Optional[str] = "model"
+    use_chunked_attn: bool = True
+    attn_chunk: int = 1024
+    remat: str = "full"            # none | full  (jax.checkpoint on the scan body)
+    decode_attn: str = "local"     # local | distributed (LSE-combine over seq shards)
+    decode_plan: object = None     # launch.sharding.DecodePlan when distributed
+    # moe execution: None -> direct local math (no shard_map)
+    use_shard_map: bool = True
+
+    def constrain(self, x, role: str):
+        if self.mesh is None or role not in self.rules:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, self.rules[role]))
+
+    def spec(self, role: str) -> P:
+        return self.rules.get(role, P())
+
+    @property
+    def batch_axes(self):
+        return self.data_axes
+
+    def axis_size(self, name) -> int:
+        if self.mesh is None or name is None:
+            return 1
+        if isinstance(name, tuple):
+            out = 1
+            for n in name:
+                out *= self.mesh.shape[n]
+            return out
+        return self.mesh.shape[name]
+
+
+def null_ctx(**kw) -> ModelCtx:
+    return ModelCtx(mesh=None, use_shard_map=False, **kw)

@@ -1,0 +1,73 @@
+"""Input construction: concrete sample batches (smoke/e2e) and abstract
+ShapeDtypeStruct stand-ins (dry-run lowering — never allocates).
+
+Modality frontends are STUBS per the assignment: whisper gets precomputed
+frame embeddings (B, enc_seq_len, d_model), pixtral gets precomputed patch
+embeddings (B, n_patches, d_model); both are inputs, not parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import layers, model as model_lib
+
+
+def train_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Abstract train/prefill batch: {tokens, labels [, frames|patch_embeds]}."""
+    dt = layers.dtype_of(cfg)
+    n_text = seq - (cfg.n_patches if cfg.family == "vlm" else 0)
+    d = {
+        "tokens": jax.ShapeDtypeStruct((batch, n_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        d["patch_embeds"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), dt)
+    if cfg.family == "audio":
+        d["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq_len, cfg.d_model), dt)
+    return d
+
+
+def prefill_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    d = train_batch_shapes(cfg, batch, seq)
+    d.pop("labels")
+    return d
+
+
+def decode_input_shapes(cfg: ModelConfig, batch: int, seq: int):
+    """(tokens, cache, pos) abstract inputs for ``decode_step``.
+
+    The cache structure is derived by eval_shape of the actual prefill —
+    always consistent with the model code, zero allocation.
+    """
+    m = model_lib.Model(cfg)
+    params = jax.eval_shape(m.init, jax.random.key(0))
+    pre_in = prefill_batch_shapes(cfg, batch, seq)
+    _, cache = jax.eval_shape(lambda p, b: m.prefill(p, b), params, pre_in)
+    tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, cache, pos
+
+
+def sample_train_batch(rng: np.random.Generator, cfg: ModelConfig, batch: int,
+                       seq: int) -> dict:
+    """Concrete synthetic batch (zipf-ish tokens; stub modality embeddings)."""
+    n_text = seq - (cfg.n_patches if cfg.family == "vlm" else 0)
+    toks = rng.integers(0, cfg.vocab_size, size=(batch, n_text), dtype=np.int32)
+    labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_patches, cfg.d_model)) * 0.02,
+            dtype=layers.dtype_of(cfg))
+        pad = np.full((batch, cfg.n_patches), -1, np.int32)  # mask patch positions
+        labels = np.concatenate([pad, labels], axis=1)
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.enc_seq_len, cfg.d_model)) * 0.02,
+            dtype=layers.dtype_of(cfg))
+    out["labels"] = jnp.asarray(labels)
+    return out

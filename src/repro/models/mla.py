@@ -1,0 +1,204 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Two exact-equivalent execution paths (tested against each other):
+
+* ``mla_train``: materialized K/V per head — best for training where heads are
+  TP-sharded and S is moderate.
+* ``mla_absorbed``: the MQA-style absorbed form used for prefill + decode.
+  The compressed cache stores only (c_kv: kv_lora_rank, k_rope: rope_dim) per
+  token — 576 floats/token for deepseek-v2 instead of n_heads*(192+128).
+  Attention runs as MQA with a single shared 576-dim key head; the per-head
+  nope projection is absorbed into the query, the value projection into the
+  output — this is the TPU-friendly layout (one big MXU matmul per step).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers
+
+
+def init_mla(key, cfg):
+    dt = layers.dtype_of(cfg)
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_head_dim
+    qr = cfg.qk_rope_head_dim
+    vd = cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq_a": layers.dense_init(ks[0], d, cfg.q_lora_rank, dt),
+        "q_a_norm": layers.init_rmsnorm(cfg.q_lora_rank),
+        "wq_b": layers.dense_init(ks[1], cfg.q_lora_rank, h * (qk + qr), dt),
+        "wkv_a": layers.dense_init(ks[2], d, cfg.kv_lora_rank + qr, dt),
+        "kv_a_norm": layers.init_rmsnorm(cfg.kv_lora_rank),
+        # split into K-nope and V halves so decode can absorb them separately
+        "wkv_b_k": layers.dense_init(ks[3], cfg.kv_lora_rank, h * qk, dt).reshape(
+            cfg.kv_lora_rank, h, qk
+        ),
+        "wkv_b_v": layers.dense_init(ks[4], cfg.kv_lora_rank, h * vd, dt).reshape(
+            cfg.kv_lora_rank, h, vd
+        ),
+        "wo": layers.dense_init(ks[5], h * vd, d, dt),
+    }
+    return p
+
+
+def _project_q(x, params, cfg, positions):
+    """-> q_nope (B,S,H,qk), q_rope (B,S,H,qr) with RoPE applied."""
+    B, S, _ = x.shape
+    h, qk, qr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = layers.rms_norm(x @ params["wq_a"], params["q_a_norm"], cfg.norm_eps)
+    q = (cq @ params["wq_b"]).reshape(B, S, h, qk + qr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(x, params, cfg, positions):
+    """-> c_kv (B,S,R) normed latent, k_rope (B,S,qr) shared rope key."""
+    qr = cfg.qk_rope_head_dim
+    kv = x @ params["wkv_a"]
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    c_kv = layers.rms_norm(c_kv, params["kv_a_norm"], cfg.norm_eps)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_train(x, params, cfg, positions, ctx):
+    """Training-time MLA.
+
+    Default: the absorbed MQA form (one shared 576-dim key head).  §Perf
+    iteration 1: the materialized form's per-head K/V tensors
+    (B,S,128,192/128) must be all-gathered across the model axis for the
+    flash sweep — ~30 GiB/layer-pass on the 16x16 mesh; absorbed K/V is
+    per-head-free (B,S,576) so those collectives vanish at the price of a
+    ~3x larger score contraction (576 vs 192) on an attention slice that is
+    ~15% of layer FLOPs.  Set ctx rules['mla_materialized']=True to get the
+    paper-conventional materialized layout (kept for tests/ablation)."""
+    if not ctx.rules.get("mla_materialized", False):
+        out, _ = mla_prefill(x, params, cfg, positions, ctx)
+        return out
+    return _mla_train_materialized(x, params, cfg, positions, ctx)
+
+
+def _mla_train_materialized(x, params, cfg, positions, ctx):
+    """Materialized path: full attention with per-head K/V."""
+    B, S, _ = x.shape
+    h, qk, qr, vd = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(x, params, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(x, params, cfg, positions)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b_k"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b_v"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)                    # (B,S,H,qk+qr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, h, qr))], axis=-1)
+
+    # run as KV-heads==H GQA with G=1; softmax scale over the true qk+qr dim
+    o = attn_lib.attention(
+        q[:, :, :, None, :], k, v, causal=True, chunk=ctx.attn_chunk,
+        use_chunked=ctx.use_chunked_attn, scale=(qk + qr) ** -0.5,
+    )
+    o = o.reshape(B, S, h * vd)
+    return o @ params["wo"]
+
+
+def _absorbed_q(q_nope, q_rope, params):
+    """Fold the per-head nope key projection into the query: MQA form.
+
+    -> q_eff (B,S,H,R+qr) matching keys concat(c_kv, k_rope).
+    """
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wkv_b_k"])
+    return jnp.concatenate([q_lat, q_rope], axis=-1)
+
+
+def mla_prefill(x, params, cfg, positions, ctx):
+    """Absorbed MQA path; returns (out, cache{c_kv,k_rope})."""
+    B, S, _ = x.shape
+    h, vd = cfg.n_heads, cfg.v_head_dim
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _project_q(x, params, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(x, params, cfg, positions)
+
+    q_eff = _absorbed_q(q_nope, q_rope, params)                        # (B,S,H,R+qr)
+    k_eff = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None]       # (B,S,1,R+qr)
+    v_eff = c_kv[:, :, None]                                           # (B,S,1,R)
+
+    o_lat = attn_lib.attention(
+        q_eff[:, :, None],  # (B,S,1,H,R+qr): KV=1 group, G=H
+        k_eff, v_eff, causal=True, chunk=ctx.attn_chunk,
+        use_chunked=ctx.use_chunked_attn, scale=scale,
+    )                                                                   # (B,S,1,H,R)
+    o_lat = o_lat[:, :, 0]
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, params["wkv_b_v"]).reshape(B, S, h * vd)
+    out = o @ params["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg, batch, seq_len, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(x, params, cfg, cache, pos, ctx):
+    """One-token absorbed decode.  x (B,1,D); cache compressed; pos scalar."""
+    B = x.shape[0]
+    h, vd = cfg.n_heads, cfg.v_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _project_q(x, params, cfg, positions)
+    c_new, kr_new = _project_kv_latent(x, params, cfg, positions)
+
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1),
+    }
+    q_eff = _absorbed_q(q_nope, q_rope, params)                        # (B,1,H,R+qr)
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    if ctx.decode_attn == "distributed" and ctx.mesh is not None:
+        o_lat = _distributed_mla_decode(q_eff, cache, pos, ctx, scale)
+    else:
+        kv_cache = {
+            "k": jnp.concatenate([cache["c_kv"], cache["k_rope"]], axis=-1)[:, :, None],
+            "v": cache["c_kv"][:, :, None],
+        }
+        o_lat = attn_lib.decode_attention(q_eff[:, :, None], kv_cache, pos,
+                                          scale=scale)[:, :, 0]        # (B,1,H,R)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, params["wkv_b_v"]).reshape(B, 1, h * vd)
+    return o @ params["wo"], cache
+
+
+def _distributed_mla_decode(q_eff, cache, pos, ctx, scale):
+    """Flash-decode over the sequence-sharded compressed cache (MQA form:
+    one shared 576-dim key head, G = n_heads query groups)."""
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map  # type: ignore
+    from jax.sharding import PartitionSpec as P
+
+    plan = ctx.decode_plan
+    seq = tuple(plan.seq_axes)
+    qspec = P(plan.b_axes, None, None, None)                 # (B,1,H,R+qr)
+    ckv_spec = P(plan.b_axes, seq if seq else None, None)    # (B,S,R)
+    S = cache["c_kv"].shape[1]
+
+    def body(q_s, ckv_s, kr_s, pos_s):
+        start = attn_lib.seq_shard_start(seq, S) if seq else 0
+        k_s = jnp.concatenate([ckv_s, kr_s], axis=-1)[:, :, None]   # (B,S_loc,1,·)
+        v_s = ckv_s[:, :, None]
+        o = attn_lib.distributed_decode_attention(
+            q_s[:, :, None], k_s, v_s, pos_s, seq, start, scale=scale)
+        return o[:, :, 0]                                            # (B,1,H,R)
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(qspec, ckv_spec, ckv_spec, P()),
+        out_specs=qspec, check_vma=False,
+    )(q_eff, cache["c_kv"], cache["k_rope"], pos)

@@ -1,0 +1,252 @@
+"""Top-k routed mixture-of-experts with unified EP/TP sharding.
+
+Execution model (see DESIGN.md §3):
+
+The residual stream enters sequence-sharded over the `model` axis (Megatron
+sequence parallelism).  Inside a ``shard_map`` over the full mesh we:
+
+  1. all-gather the token shard over `model` (the Megatron SP gather) —
+     tokens become *replicated* across the model axis within each data shard;
+  2. route every local token; each model shard builds dispatch buffers only
+     for the expert slice it owns:
+        * ``ep`` strategy (n_experts % model_axis == 0, e.g. deepseek-v2
+          160/16): each shard owns E/model full experts.  Dispatch needs no
+          all-to-all because tokens are already replicated over `model` —
+          the replicated-dispatch EP formulation;
+        * ``tp`` strategy (n_experts < model_axis, e.g. grok-1 8 < 16):
+          every shard owns all experts but a 1/model slice of the FFN dim.
+  3. per-expert GEMMs over capacity-padded buffers (sort-free scatter
+     dispatch: slot = one-hot exclusive cumsum — never materializes a
+     (T, E, cap) tensor);
+  4. partial outputs (partial over experts for ep / over the contracted FFN
+     dim for tp) are combined by one ``psum_scatter`` over `model`, which is
+     simultaneously the Megatron-SP reduce-scatter back to sequence shards.
+     (Decode steps carry too few tokens to sequence-shard; they run in
+     "replicated" mode: no SP gather, plain psum combine.)
+
+FSDP: expert weights are additionally sharded over the fsdp axis and
+all-gathered just-in-time inside the shard (the manual analogue of what
+pjit-auto FSDP inserts; overlap is XLA's latency-hiding scheduler's job).
+
+Weight layouts and sharding specs:
+      w_gate/w_up (E, D, F)        w_down (E, F, D)
+  ep: P(model, fsdp, None)         P(model, fsdp, None)   # E over model, fsdp gathers dim1
+  tp: P(None, fsdp, model)         P(None, model, fsdp)   # F over model, fsdp gathers dim1/dim2
+
+With ``ctx.mesh is None`` every collective is the identity and the same code
+runs single-device (unit tests + CPU training examples).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def init_moe(key, cfg):
+    dt = layers.dtype_of(cfg)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": _expert_init(ks[1], e, d, f, dt),
+        "w_up": _expert_init(ks[2], e, d, f, dt),
+        "w_down": _expert_init(ks[3], e, f, d, dt),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = layers.init_mlp(ks[4], d, cfg.n_shared_experts * f, gated=True, dtype=dt)
+    return p
+
+
+def _expert_init(key, e, d_in, d_out, dt):
+    keys = jax.random.split(key, e)
+    return jax.vmap(lambda k: layers.dense_init(k, d_in, d_out, dt))(keys)
+
+
+def moe_weight_specs(cfg, strategy: str, model_axis, fsdp_axis):
+    """PartitionSpecs for the stacked (L-leading) expert weights."""
+    m, f = model_axis, fsdp_axis
+    if strategy == "ep":
+        wg = wd = P(None, m, f, None)
+    else:
+        wg = P(None, None, f, m)
+        wd = P(None, None, m, f)
+    return {"w_gate": wg, "w_up": wg, "w_down": wd, "router": P(None, None, None)}
+
+
+def _route(x, router_w, cfg):
+    """x (T, D) -> (weights (T,K), idx (T,K), aux load-balance loss)."""
+    logits = x.astype(jnp.float32) @ router_w                         # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.experts_per_tok)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=0)                                      # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32).sum(1), axis=0)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _dispatch_indices(idx, e_start, e_count, capacity):
+    """Sort-free capacity dispatch for the local expert slice [e_start, e_start+e_count).
+
+    idx: (T, K) global expert ids.  Returns (slot (T, K), keep (T, K)) where
+    slot indexes an (e_count*capacity + 1) buffer; the last row is the drop
+    sink.  Position within expert = exclusive one-hot cumsum over the
+    flattened (T·K) assignment order (deterministic first-come-first-served
+    capacity dropping).
+    """
+    T, K = idx.shape
+    flat = idx.reshape(-1)
+    local = flat - e_start
+    in_slice = (local >= 0) & (local < e_count)
+    safe = jnp.where(in_slice, local, e_count)
+    oh = jax.nn.one_hot(safe, e_count + 1, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh                                 # exclusive count
+    pos = jnp.take_along_axis(pos, safe[:, None], axis=1)[:, 0]
+    keep = in_slice & (pos < capacity)
+    slot = jnp.where(keep, local * capacity + pos, e_count * capacity)
+    return slot.reshape(T, K), keep.reshape(T, K)
+
+
+def _expert_ffn(buf, w_gate, w_up, w_down):
+    """buf (E_loc, cap, D) -> (E_loc, cap, D_out); gated SiLU FFN per expert."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", buf, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _moe_shard_body(x_shard, router_w, w_gate, w_up, w_down, *, cfg,
+                    model_axis: Optional[str], fsdp_axis: Optional[str],
+                    data_axes: tuple, strategy: str, sp: bool):
+    """Per-(data, model)-shard computation.  x_shard: (B_loc, S_loc, D).
+
+    The token flatten happens HERE, after the Megatron-SP gather — merging
+    (B[data], S[model]) outside shard_map is inexpressible for the SPMD
+    partitioner and forces a full activation gather."""
+    if sp and model_axis is not None:
+        x = jax.lax.all_gather(x_shard, model_axis, axis=1, tiled=True)
+    else:
+        x = x_shard
+    B_loc, S_full, D = x.shape
+    x = x.reshape(B_loc * S_full, D)
+    T = B_loc * S_full
+
+    if fsdp_axis is not None:
+        w_gate = jax.lax.all_gather(w_gate, fsdp_axis, axis=1, tiled=True)
+        w_up = jax.lax.all_gather(w_up, fsdp_axis, axis=1, tiled=True)
+        gdim = 1 if strategy == "ep" else 2
+        w_down = jax.lax.all_gather(w_down, fsdp_axis, axis=gdim, tiled=True)
+
+    w, idx, aux = _route(x, router_w, cfg)
+    K = cfg.experts_per_tok
+    e_count = w_gate.shape[0]
+    if strategy == "ep" and model_axis is not None:
+        e_start = jax.lax.axis_index(model_axis) * e_count
+    else:
+        e_start = 0
+    # capacity: cf-scaled mean load with a small-floor (decode steps carry few
+    # tokens — drops there cost quality for no memory win), never above T
+    # (T slots per expert is always lossless).
+    cap_raw = -(-T * K * cfg.capacity_factor // max(cfg.n_experts, 1))
+    capacity = int(min(T, max(cap_raw, min(T, 4 * K))))
+
+    slot, keep = _dispatch_indices(idx, e_start, e_count, capacity)
+    # dispatch/combine loop over the K assignments per token: avoids ever
+    # materializing (T·K, D) tensors (K=6 would cost 6x activation memory)
+    buf = jnp.zeros((e_count * capacity + 1, D), x.dtype)
+    for j in range(K):
+        # drop-sink row absorbs non-kept assignments (slot already routes there)
+        buf = buf.at[slot[:, j]].add(jnp.where(keep[:, j, None], x, 0))
+    buf = buf[:-1].reshape(e_count, capacity, D)
+
+    out_buf = _expert_ffn(buf, w_gate, w_up, w_down)
+    D_out = out_buf.shape[-1]
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(e_count * capacity, D_out),
+         jnp.zeros((1, D_out), x.dtype)], 0)
+    y = jnp.zeros((T, D_out), x.dtype)
+    for j in range(K):
+        wj = jnp.where(keep[:, j], w[:, j], 0.0).astype(x.dtype)
+        y = y + flat_out[slot[:, j]] * wj[:, None]
+
+    # 4. combine partials + SP reduce-scatter back to sequence shards
+    y = y.reshape(B_loc, S_full, D_out)
+    if model_axis is not None:
+        if sp:
+            y = jax.lax.psum_scatter(y, model_axis, scatter_dimension=1, tiled=True)
+        else:
+            y = jax.lax.psum(y, model_axis)
+        aux = jax.lax.pmean(aux, model_axis)
+    for ax in data_axes:
+        aux = jax.lax.pmean(aux, ax)
+    return y, aux
+
+
+def moe_ffn(x, params, cfg, ctx):
+    """x: (B, S, D) residual -> (y (B, S, D), aux_loss scalar).
+
+    Token sharding chosen by divisibility: sequence-parallel (data+model)
+    when B*S divides the full mesh, data-only when it divides the data axes
+    (decode steps), else fully replicated (long_500k batch=1).
+    """
+    B, S, D = x.shape
+    strategy = cfg.moe_sharding
+    if strategy in ("auto", "ep"):
+        if ctx.mesh is None or cfg.n_experts % max(ctx.axis_size(ctx.model_axis), 1) != 0:
+            strategy = "tp"
+        else:
+            strategy = "ep"
+
+    if ctx.mesh is None or not ctx.use_shard_map:
+        y, aux = _moe_shard_body(
+            x, params["router"], params["w_gate"],
+            params["w_up"], params["w_down"], cfg=cfg, model_axis=None,
+            fsdp_axis=None, data_axes=(), strategy="tp", sp=False)
+    else:
+        mesh, maxis, faxis = ctx.mesh, ctx.model_axis, ctx.fsdp_axis
+        dsize = ctx.axis_size(ctx.data_axes)
+        msize = ctx.axis_size(maxis)
+        # keep the (B, S, D) layout at the shard_map boundary; flatten inside
+        if B % dsize == 0 and S % msize == 0:
+            x_spec, sp = P(tuple(ctx.data_axes), maxis, None), True
+        elif B % dsize == 0:
+            x_spec, sp = P(tuple(ctx.data_axes), None, None), False
+        else:
+            x_spec, sp = P(None, None, None), False
+
+        wspecs = moe_weight_specs(cfg, strategy, maxis, faxis)
+        # layer-stacked specs have a leading None; single-layer slices drop it
+        def drop_lead(s):
+            return P(*s[1:])
+
+        in_specs = (x_spec, drop_lead(wspecs["router"]),
+                    drop_lead(wspecs["w_gate"]), drop_lead(wspecs["w_up"]),
+                    drop_lead(wspecs["w_down"]))
+        out_specs = (x_spec, P())
+
+        def body(x_s, rt, wg, wu, wd):
+            # pmean aux over every data axis (identity where already replicated)
+            return _moe_shard_body(
+                x_s, rt, wg, wu, wd, cfg=cfg, model_axis=maxis,
+                fsdp_axis=faxis, data_axes=tuple(ctx.data_axes),
+                strategy=strategy, sp=sp)
+
+        y, aux = shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(x, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"])
+
+    if cfg.n_shared_experts > 0:
+        y = y + layers.mlp(x, params["shared"], gated=True)
+    return y, aux * cfg.moe_aux_loss_coef

@@ -1,0 +1,261 @@
+"""Mamba2: state-space duality (SSD) blocks.  [arXiv:2405.21060]
+
+Chunked SSD (the training/prefill path): ``lax.scan`` over sequence chunks;
+within a chunk the quadratic "attention-like" dual form runs on the MXU,
+between chunks a (B, H, P, N) state is carried — O(S·Q) work, O(S) memory.
+All decay factors are exp of non-positive numbers (A < 0), so the fp32
+accumulators are stable without log-space tricks.
+
+Decode: one-token state update, O(1) per token — this is why the ssm/hybrid
+archs are the only ones that run the long_500k cell.
+
+Layout notes: projections are split per segment (z / x / B / C / dt) instead
+of one fused in_proj so the model-axis sharding of z/x (d_inner) never crosses
+segment boundaries; the depthwise conv is likewise per-segment (mathematically
+identical to the fused grouped conv).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_ssd(key, cfg):
+    dt = layers.dtype_of(cfg)
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    h = cfg.ssm_nheads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    k = cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    # dt bias init: softplus^-1 of dt ~ U[1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[6], (h,), minval=1e-3, maxval=1e-1)
+    dt_bias = u + jnp.log(-jnp.expm1(-u))
+    return {
+        "wz": layers.dense_init(ks[0], d, din, dt),
+        "wx": layers.dense_init(ks[1], d, din, dt),
+        "wB": layers.dense_init(ks[2], d, g * n, dt),
+        "wC": layers.dense_init(ks[3], d, g * n, dt),
+        "wdt": layers.dense_init(ks[4], d, h, dt),
+        "conv_x": _conv_init(ks[5], din, k, dt),
+        "conv_B": _conv_init(jax.random.fold_in(ks[5], 1), g * n, k, dt),
+        "conv_C": _conv_init(jax.random.fold_in(ks[5], 2), g * n, k, dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": layers.init_rmsnorm(din),
+        "wo": layers.dense_init(ks[7], din, d, dt),
+    }
+
+
+def _conv_init(key, ch, k, dt):
+    w = jax.random.normal(key, (ch, k)) * (1.0 / jnp.sqrt(k))
+    return {"w": w.astype(dt), "b": jnp.zeros((ch,), dt)}
+
+
+def causal_conv(x, p):
+    """Depthwise causal conv.  x (B, S, C); weight (C, K)."""
+    k = p["w"].shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * p["w"][:, i] for i in range(k))
+    return out + p["b"]
+
+
+def conv_decode(x_t, conv_state, p):
+    """x_t (B, 1, C) with rolling window state (B, K-1, C) -> (y_t, new_state)."""
+    window = jnp.concatenate([conv_state, x_t], axis=1)               # (B, K, C)
+    y = jnp.einsum("bkc,ck->bc", window, p["w"])[:, None] + p["b"]
+    return y, window[:, 1:]
+
+
+def _chunk_scan_step(carry, xs, A):
+    """One SSD chunk.  carry: state (B,H,P,N); xs: per-chunk tensors."""
+    state = carry
+    x_c, dt_c, B_c, C_c = xs          # (B,Q,H,P), (B,Q,H), (B,Q,H,N), (B,Q,H,N)
+    a = dt_c * A                       # (B,Q,H) non-positive log-decays
+    cum = jnp.cumsum(a, axis=1)        # inclusive
+    # intra-chunk dual form
+    seg = cum[:, :, None, :] - cum[:, None, :, :]                     # (B,Qi,Qj,H)
+    Qn = x_c.shape[1]
+    causal = jnp.tril(jnp.ones((Qn, Qn), bool))
+    decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bihn,bjhn->bijh", C_c, B_c) * decay          # (B,Qi,Qj,H)
+    xbar = x_c * dt_c[..., None]
+    y = jnp.einsum("bijh,bjhp->bihp", scores, xbar)
+    # inter-chunk: contribution of the incoming state
+    y = y + jnp.einsum("bhpn,bihn->bihp", state, C_c * jnp.exp(cum)[..., None])
+    # state update: decay old state across the chunk + inject chunk outer products
+    chunk_decay = jnp.exp(cum[:, -1])                                 # (B,H)
+    w = jnp.exp(cum[:, -1:, :] - cum)                                 # (B,Q,H)
+    state_new = state * chunk_decay[:, :, None, None] + jnp.einsum(
+        "bjhp,bjhn->bhpn", xbar * w[..., None], B_c)
+    return state_new, y
+
+
+def ssd_chunked(x, dt, A, B_in, C_in, chunk: int, state=None):
+    """Full-sequence SSD via chunk scan.
+
+    x (B,S,H,P); dt (B,S,H) (already softplus'd); A (H,) negative;
+    B_in/C_in (B,S,H,N) (group-broadcast done by caller).
+    Returns (y (B,S,H,P) fp32, final_state (B,H,P,N) fp32).
+    """
+    Bb, S, H, P = x.shape
+    N = B_in.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt=0 padding is exact: decay exp(0)=1 and zero state injection
+        widths = lambda t: [(0, pad) if i == 1 else (0, 0) for i in range(t.ndim)]
+        x = jnp.pad(x, widths(x))
+        dt = jnp.pad(dt, widths(dt))
+        B_in = jnp.pad(B_in, widths(B_in))
+        C_in = jnp.pad(C_in, widths(C_in))
+    S_p = S + pad
+    nc = S_p // Q
+
+    def to_chunks(t):
+        return t.reshape((Bb, nc, Q) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xs = (to_chunks(x.astype(jnp.float32)), to_chunks(dt.astype(jnp.float32)),
+          to_chunks(B_in.astype(jnp.float32)), to_chunks(C_in.astype(jnp.float32)))
+    s0 = jnp.zeros((Bb, H, P, N), jnp.float32) if state is None else state
+
+    # remat the chunk body: backward recomputes the (Q,Q) decay/score tiles
+    # instead of stashing them for every chunk (O(S·Q) -> O(state) saved)
+    step = jax.checkpoint(
+        lambda c, xs_: _chunk_scan_step(c, xs_, A.astype(jnp.float32)),
+        prevent_cse=False)
+    final, ys = jax.lax.scan(step, s0, xs)                            # ys (nc,B,Q,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S_p, H, P)[:, :S]
+    return y, final
+
+
+def ssd_ref(x, dt, A, B_in, C_in, state=None):
+    """Naive per-token recurrence — the oracle for tests."""
+    Bb, S, H, P = x.shape
+    N = B_in.shape[-1]
+    s0 = jnp.zeros((Bb, H, P, N), jnp.float32) if state is None else state
+
+    def step(s, t):
+        x_t, dt_t, B_t, C_t = t
+        a = jnp.exp(dt_t * A)                                         # (B,H)
+        s = s * a[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t * dt_t[..., None], B_t)
+        y = jnp.einsum("bhpn,bhn->bhp", s, C_t)
+        return s, y
+
+    ts = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          B_in.astype(jnp.float32).transpose(1, 0, 2, 3),
+          C_in.astype(jnp.float32).transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, s0, ts)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32):
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    k = cfg.conv_kernel
+    return {
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, k - 1, cfg.ssm_d_inner), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+    }
+
+
+def _project(x, p, cfg):
+    """Shared pre-SSD projections.  x (B, S, D)."""
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    B_r = x @ p["wB"]
+    C_r = x @ p["wC"]
+    dt_r = x @ p["wdt"]
+    return z, xs, B_r, C_r, dt_r
+
+
+def _finish(y, x4, z, p, cfg):
+    """Skip + gate + norm + out-projection.  y fp32 (B,S,H,P)."""
+    Bb, S = y.shape[:2]
+    y = y + p["D_skip"][None, None, :, None] * x4.astype(jnp.float32)
+    y = y.reshape(Bb, S, cfg.ssm_d_inner).astype(z.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    return y @ p["wo"]
+
+
+def _broadcast_groups(t, cfg):
+    """(B,S,G,N) -> (B,S,H,N)."""
+    Bb, S = t.shape[:2]
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    t = t.reshape(Bb, S, g, n)
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def mamba_block(x, p, cfg, ctx):
+    """Full-sequence mamba2 mixer (train/prefill).  x (B,S,D) -> (B,S,D)."""
+    Bb, S, _ = x.shape
+    h, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    z, xs, B_r, C_r, dt_r = _project(x, p, cfg)
+    xs = jax.nn.silu(causal_conv(xs, p["conv_x"]))
+    B_r = jax.nn.silu(causal_conv(B_r, p["conv_B"]))
+    C_r = jax.nn.silu(causal_conv(C_r, p["conv_C"]))
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    x4 = xs.reshape(Bb, S, h, pd)
+    x4 = ctx.constrain(x4, "ssm_x")
+    Bh = _broadcast_groups(B_r, cfg)
+    Ch = _broadcast_groups(C_r, cfg)
+    y, _ = ssd_chunked(x4, dt, A, Bh, Ch, cfg.ssm_chunk)
+    return _finish(y, x4, z, p, cfg)
+
+
+def mamba_prefill(x, p, cfg, ctx):
+    """Like mamba_block but also returns the decode cache (final SSD state +
+    conv windows holding the last K-1 *pre-activation* projected inputs)."""
+    Bb, S, _ = x.shape
+    h, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    k = cfg.conv_kernel
+    z, xs_raw, B_raw, C_raw, dt_r = _project(x, p, cfg)
+
+    def window(t):
+        pad = max(k - 1 - S, 0)
+        w = t[:, max(S - (k - 1), 0):]
+        return jnp.pad(w, ((0, 0), (pad, 0), (0, 0)))
+
+    xs = jax.nn.silu(causal_conv(xs_raw, p["conv_x"]))
+    B_r = jax.nn.silu(causal_conv(B_raw, p["conv_B"]))
+    C_r = jax.nn.silu(causal_conv(C_raw, p["conv_C"]))
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    x4 = ctx.constrain(xs.reshape(Bb, S, h, pd), "ssm_x")
+    y, state = ssd_chunked(x4, dt, A, _broadcast_groups(B_r, cfg),
+                           _broadcast_groups(C_r, cfg), cfg.ssm_chunk)
+    cache = {"state": state, "conv_x": window(xs_raw),
+             "conv_B": window(B_raw), "conv_C": window(C_raw)}
+    return _finish(y, x4, z, p, cfg), cache
+
+
+def mamba_decode(x, p, cfg, cache, ctx):
+    """One-token decode.  x (B,1,D); cache from init_ssm_cache."""
+    Bb = x.shape[0]
+    h, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    z, xs, B_r, C_r, dt_r = _project(x, p, cfg)
+    xs, conv_x = conv_decode(xs, cache["conv_x"], p["conv_x"])
+    B_r, conv_B = conv_decode(B_r, cache["conv_B"], p["conv_B"])
+    C_r, conv_C = conv_decode(C_r, cache["conv_C"], p["conv_C"])
+    xs, B_r, C_r = jax.nn.silu(xs), jax.nn.silu(B_r), jax.nn.silu(C_r)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    x4 = xs.reshape(Bb, 1, h, pd)
+    Bh = _broadcast_groups(B_r, cfg)[:, 0]                                # (B,H,N)
+    Ch = _broadcast_groups(C_r, cfg)[:, 0]
+    a = jnp.exp(dt * A)                                                   # (B,H)
+    state = cache["state"] * a[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", (x4[:, 0] * dt[..., None]).astype(jnp.float32), Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))[:, None]  # (B,1,H,P)
+    out = _finish(y, x4, z, p, cfg)
+    return out, {"state": state, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}

@@ -1,0 +1,11 @@
+from repro.optim.compression import compressed, int8_allreduce  # noqa: F401
+from repro.optim.optimizers import (  # noqa: F401
+    adamw,
+    clip_by_global_norm,
+    sgd,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_warmup_schedule,
+    exponential_decay_schedule,
+)

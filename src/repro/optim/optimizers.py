@@ -1,0 +1,137 @@
+"""Minimal optax-style optimizers (optax is not vendored in this container).
+
+An optimizer is a pair of pure functions:
+    init(params)                     -> opt_state
+    update(grads, opt_state, params) -> (new_params, new_opt_state)
+
+Multi-precision policy (cfg.opt_precision):
+  * "fp32":         fp32 master params + fp32 moments (bf16 compute copies
+                    are cast on the fly by the train step)
+  * "moments_fp32": no master copy — params stay in model dtype, moments fp32
+                    (used by the >100B MoE archs to fit v5e HBM; see DESIGN.md)
+
+Gradient compression note: params (hence AD cotangents) are bf16 for the big
+archs, so the cross-DP grad all-reduce in the lowered HLO is bf16 — half the
+collective bytes of an fp32 reduction.  The update math is always fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+    keep_master: bool = True,
+) -> Optimizer:
+    """AdamW with optional fp32 master copy and global-norm clipping."""
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+        }
+        if keep_master:
+            # jnp.array(copy=True): .astype is a no-op alias for f32 leaves,
+            # and aliased leaves break buffer donation (donated twice)
+            state["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gn = None
+        if grad_clip is not None:
+            grads, gn = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        ref = state["master"] if keep_master else params
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr_t * (upd_ + weight_decay * p32)
+            return m, v, p32
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(ref)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_m = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        new32 = treedef.unflatten([o[2] for o in out])
+        new_params = jax.tree.map(lambda p, n: n.astype(p.dtype), params, new32)
+        new_state = {"step": step, "m": new_m, "v": new_v}
+        if keep_master:
+            new_state["master"] = new32
+        metrics = {"lr": lr_t}
+        if gn is not None:
+            metrics["grad_norm"] = gn
+        return new_params, new_state, metrics
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0,
+        grad_clip: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gn = None
+        if grad_clip is not None:
+            grads, gn = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(step)
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), params, mu)
+            new_state = {"step": step, "mu": mu}
+        else:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)
+                              ).astype(p.dtype), params, grads)
+            new_state = {"step": step}
+        metrics = {"lr": lr_t}
+        if gn is not None:
+            metrics["grad_norm"] = gn
+        return new_params, new_state, metrics
+
+    return Optimizer(init=init, update=update)

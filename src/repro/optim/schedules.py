@@ -1,0 +1,34 @@
+"""Learning-rate schedules.  The exponential-decay schedule mirrors the
+paper's HP search dimensions (lr, decay-rate ``dr``, decay-steps ``ds`` —
+Table II of SpotTune), which also produce the multi-stage loss curves that
+EarlyCurve's staged model exists for."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay_schedule(lr: float, decay_rate: float, decay_steps: int,
+                               staircase: bool = True):
+    """lr * dr^(step/ds); staircase=True gives the stepped curve that creates
+    multi-stage validation-loss trajectories (paper Fig. 5(b))."""
+    def f(step):
+        e = step.astype(jnp.float32) / decay_steps
+        if staircase:
+            e = jnp.floor(e)
+        return jnp.asarray(lr, jnp.float32) * (decay_rate ** e)
+    return f
+
+
+def cosine_warmup_schedule(lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * jnp.where(s < warmup, warm, cos)
+    return f

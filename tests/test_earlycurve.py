@@ -1,0 +1,113 @@
+"""EarlyCurve (paper §III-C, Eq. 4-7): stage detection, fitting, prediction,
+plateau handling — plus hypothesis property tests of the Eq. 6 invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.earlycurve import (EarlyCurve, SLAQPredictor, detect_stages,
+                                   fit_stage, predict_from_fit)
+
+
+def make_curve(n=100, stages=1, noise=0.0, seed=0, bounds=None):
+    """Synthetic Eq.4-family curve with sharp drops at stage boundaries.
+
+    Boundaries default to the front 60% of the horizon (paper setting: the
+    last LR decay has happened before the θ=0.7 cut, so the final stage has
+    enough points to fit — what EarlyCurve exploits and SLAQ pollutes)."""
+    rng = np.random.default_rng(seed)
+    ks = np.arange(1, n + 1, dtype=np.float64)
+    vals = np.zeros(n)
+    level, l_inf = 3.0, 0.5
+    if bounds is None:
+        bounds = [int(n * (s + 1) * 0.6 / stages) for s in range(stages - 1)]
+    cuts = [0] + list(bounds) + [n]
+    for lo, hi in zip(cuts, cuts[1:]):
+        kk = ks[lo:hi] - ks[lo] + 1
+        tgt = l_inf + (level - l_inf) * 0.35
+        vals[lo:hi] = tgt + (level - tgt) / (1 + 0.15 * kk)
+        level = vals[hi - 1] * 0.45  # drop: zeta ~ 0.55 > xi
+    if noise:
+        vals = vals * (1 + rng.normal(0, noise, n))
+    return ks, vals
+
+
+def test_stage_detection_single():
+    ks, vals = make_curve(stages=1)
+    assert len(detect_stages(vals)) == 1
+
+
+def test_stage_detection_multi():
+    ks, vals = make_curve(n=150, stages=3)
+    segs = detect_stages(vals)
+    assert len(segs) == 3
+
+
+def test_stage_detection_boundaries_match():
+    ks, vals = make_curve(n=150, stages=3, bounds=[50, 100])
+    segs = detect_stages(vals)
+    assert [s[0] for s in segs] == [0, 50, 100]
+
+
+@given(st.lists(st.floats(0.01, 100.0), min_size=1, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_stage_partition_invariants(vals):
+    """Eq. 6: stages partition [0, T) — disjoint, ordered, covering."""
+    segs = detect_stages(vals)
+    assert segs[0][0] == 0
+    assert segs[-1][1] == len(vals)
+    for (l1, r1), (l2, r2) in zip(segs, segs[1:]):
+        assert r1 == l2 and l1 < r1
+    assert segs[-1][0] < segs[-1][1]
+
+
+def test_fit_extrapolates_sublinear():
+    ks, vals = make_curve(n=100, stages=1)
+    cut = 70
+    fit = fit_stage(ks[:cut], vals[:cut])
+    pred = predict_from_fit(fit, 100.0)
+    assert abs(pred - vals[-1]) / vals[-1] < 0.1
+
+
+def test_earlycurve_beats_slaq_on_multistage():
+    """Paper Fig. 11: single-stage fitting misses LR-decay structure."""
+    ec, slaq = EarlyCurve(), SLAQPredictor()
+    errs_ec, errs_sl = [], []
+    for seed in range(6):
+        ks, vals = make_curve(n=150, stages=3, noise=0.002, seed=seed)
+        cut = int(0.7 * len(vals))
+        p_ec = ec.predict_final(ks[:cut], vals[:cut], 150)
+        p_sl = slaq.predict_final(ks[:cut], vals[:cut], 150)
+        tf = vals[-1]
+        errs_ec.append(abs(p_ec - tf) / tf)
+        errs_sl.append(abs(p_sl - tf) / tf)
+    assert np.mean(errs_ec) < np.mean(errs_sl)
+
+
+def test_plateau_detection():
+    ec = EarlyCurve()
+    flat = [1.0 + 1e-5 * i for i in range(30)]
+    assert ec.converged(flat)
+    ks, vals = make_curve(n=30, stages=1)
+    assert not ec.converged(vals[:25])
+
+
+def test_prediction_with_fresh_stage_falls_back():
+    """A stage with < min_points points can't be fit — fall back gracefully."""
+    ec = EarlyCurve(min_points=8)
+    ks, vals = make_curve(n=60, stages=1)
+    # append a sharp drop with only 3 points after it
+    vals2 = np.concatenate([vals, [vals[-1] * 0.4, vals[-1] * 0.39, vals[-1] * 0.389]])
+    ks2 = np.arange(1, len(vals2) + 1)
+    pred = ec.predict_final(ks2, vals2, 100)
+    assert np.isfinite(pred) and pred > 0
+
+
+@given(st.integers(1, 4), st.floats(0.0, 0.004))
+@settings(max_examples=20, deadline=None)
+def test_prediction_finite_property(stages, noise):
+    ec = EarlyCurve()
+    ks, vals = make_curve(n=80, stages=stages, noise=noise, seed=1)
+    cut = 60
+    pred = ec.predict_final(ks[:cut], vals[:cut], 80)
+    assert np.isfinite(pred)

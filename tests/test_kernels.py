@@ -1,0 +1,89 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret mode vs the
+pure-jnp oracle (ref.py), per the deliverable-(c) contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lstm_cell import lstm_cell_pallas
+from repro.kernels.ssd_scan import ssd_chunk_pallas
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("B,I,H,bb,bh", [
+    (4, 6, 32, 4, 16),
+    (8, 7, 64, 4, 32),
+    (2, 13, 16, 2, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_cell_sweep(B, I, H, bb, bh, dtype, rng):
+    x = jnp.asarray(rng.standard_normal((B, I)), dtype)
+    h = jnp.asarray(rng.standard_normal((B, H)), dtype)
+    c = jnp.asarray(rng.standard_normal((B, H)), dtype)
+    wih = jnp.asarray(rng.standard_normal((I, 4 * H)) * 0.3, dtype)
+    whh = jnp.asarray(rng.standard_normal((H, 4 * H)) * 0.3, dtype)
+    b = jnp.asarray(rng.standard_normal((4 * H,)) * 0.1, dtype)
+    h1, c1 = ref.lstm_cell_ref(x, h, c, wih, whh, b)
+    h2, c2 = lstm_cell_pallas(x, h, c, wih, whh, b, interpret=True,
+                              block_b=bb, block_h=bh)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(h1, np.float32), np.asarray(h2, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(c1, np.float32), np.asarray(c2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,D,bq,bk", [
+    (2, 64, 3, 16, 16, 16),
+    (1, 128, 2, 32, 32, 16),
+    (2, 48, 1, 8, 16, 16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, D, bq, bk, causal, dtype, rng):
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    o1 = ref.flash_attention_ref(q, k, v, causal)
+    o2 = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                block_k=bk, interpret=True)
+    tol = 3e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,Q,H,P,N", [
+    (2, 32, 3, 8, 4),
+    (1, 64, 2, 16, 8),
+    (3, 16, 1, 4, 4),
+])
+def test_ssd_chunk_sweep(B, Q, H, P, N, rng):
+    x = jnp.asarray(rng.standard_normal((B, Q, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, Q, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bi = jnp.asarray(rng.standard_normal((B, Q, H, N)), jnp.float32)
+    Ci = jnp.asarray(rng.standard_normal((B, Q, H, N)), jnp.float32)
+    st = jnp.asarray(rng.standard_normal((B, H, P, N)), jnp.float32)
+    y1, s1 = ref.ssd_chunk_ref(x, dt, A, Bi, Ci, st)
+    y2, s2 = ssd_chunk_pallas(x, dt, A, Bi, Ci, st, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_ops_dispatch_cpu_uses_ref(rng):
+    """On the CPU backend the dispatcher must route to the jnp oracle."""
+    x = jnp.asarray(rng.standard_normal((2, 6)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    wih = jnp.asarray(rng.standard_normal((6, 32)), jnp.float32)
+    whh = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    b = jnp.zeros((32,), jnp.float32)
+    h1, c1 = ops.lstm_cell(x, h, c, wih, whh, b)
+    h2, c2 = ref.lstm_cell_ref(x, h, c, wih, whh, b)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-6)
+    # force=interpret exercises the Pallas body on CPU
+    h3, c3 = ops.lstm_cell(x, h, c, wih, whh, b, force="interpret")
+    np.testing.assert_allclose(np.asarray(h3), np.asarray(h2), rtol=1e-5, atol=1e-5)

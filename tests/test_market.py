@@ -1,0 +1,104 @@
+"""Spot market simulator: revocation semantics, first-hour refund, billing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.market import (DEFAULT_POOL, HOUR, MINUTE, SpotMarket,
+                               synth_trace)
+
+
+def test_trace_bounds_and_shape():
+    inst = DEFAULT_POOL[2]
+    tr = synth_trace(inst, 1440 * 3, seed=1)
+    assert tr.shape == (1440 * 3,)
+    assert np.all(tr >= 0.05 * inst.od_price - 1e-6)
+    assert np.all(tr <= 2.0 * inst.od_price + 1e-6)
+
+
+def test_revocation_when_price_exceeds_max():
+    m = SpotMarket(days=2, seed=3)
+    inst = m.pool[0]
+    t = 10 * MINUTE
+    # max price below current -> immediate-ish revocation
+    a = m.acquire(inst, max_price=m.price(inst, t) - 1e-6, t=t)
+    assert a.t_revoke is not None and a.t_revoke >= t
+    # absurdly high max price -> never revoked within horizon
+    b = m.acquire(inst, max_price=inst.od_price * 10, t=t)
+    assert b.t_revoke is None
+
+
+def test_notice_is_two_minutes_before():
+    m = SpotMarket(days=2, seed=3, notice_s=120.0)
+    inst = m.pool[0]
+    a = m.acquire(inst, max_price=m.price(inst, 0.0) + 1e-5, t=0.0)
+    if a.t_revoke is not None:
+        assert m.notice_time(a) == a.t_revoke - 120.0
+
+
+def test_first_hour_refund():
+    m = SpotMarket(days=2, seed=3)
+    inst = m.pool[0]
+    a = m.acquire(inst, inst.od_price * 10, t=0.0)
+    rec = m.release(a, t=30 * MINUTE, revoked=True)
+    assert rec["refund"] == pytest.approx(rec["cost"])
+    assert m.billed == pytest.approx(0.0)
+    # voluntary shutdown never refunds
+    b = m.acquire(inst, inst.od_price * 10, t=0.0)
+    rec2 = m.release(b, t=30 * MINUTE, revoked=False)
+    assert rec2["refund"] == 0.0 and rec2["cost"] > 0
+
+
+def test_no_refund_after_first_hour():
+    m = SpotMarket(days=2, seed=3)
+    inst = m.pool[0]
+    a = m.acquire(inst, inst.od_price * 10, t=0.0)
+    rec = m.release(a, t=HOUR + 5 * MINUTE, revoked=True)
+    assert rec["refund"] == 0.0
+
+
+def test_refund_disabled_mode():
+    """Paper §V-A: stable markets degrade SpotTune to speed-x-price argmin."""
+    m = SpotMarket(days=2, seed=3, refund_enabled=False)
+    inst = m.pool[0]
+    a = m.acquire(inst, inst.od_price * 10, t=0.0)
+    rec = m.release(a, t=10 * MINUTE, revoked=True)
+    assert rec["refund"] == 0.0
+
+
+def test_billing_integral_matches_trace():
+    m = SpotMarket(days=1, seed=7)
+    inst = m.pool[1]
+    t0, t1 = 5 * MINUTE, 65 * MINUTE
+    a = m.acquire(inst, inst.od_price * 10, t=t0)
+    rec = m.release(a, t=t1, revoked=False)
+    tr = m.traces[inst.name]
+    expected = sum(float(tr[i]) * MINUTE for i in range(5, 65)) / HOUR
+    assert rec["cost"] == pytest.approx(expected, rel=1e-6)
+
+
+@given(st.integers(0, 1000), st.integers(1, 600), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_billing_properties(start_min, dur_min, revoked):
+    m = SpotMarket(days=2, seed=11)
+    inst = m.pool[0]
+    t0 = start_min * MINUTE
+    t1 = t0 + dur_min * MINUTE
+    a = m.acquire(inst, inst.od_price * 10, t=t0)
+    rec = m.release(a, t=t1, revoked=revoked)
+    assert rec["cost"] >= 0
+    assert 0 <= rec["refund"] <= rec["cost"] + 1e-12
+    if revoked and dur_min < 60:
+        assert rec["refund"] == pytest.approx(rec["cost"])
+    if dur_min > 60:
+        assert rec["refund"] == 0.0
+    # sanity: cost bounded by max price x duration
+    assert rec["cost"] <= 2.0 * inst.od_price * (dur_min / 60.0) + 1e-9
+
+
+def test_avg_price_window():
+    m = SpotMarket(days=1, seed=1)
+    inst = m.pool[0]
+    avg = m.avg_price(inst, 120 * MINUTE)
+    tr = m.traces[inst.name]
+    assert avg == pytest.approx(float(np.mean(tr[61:121])), rel=1e-5)

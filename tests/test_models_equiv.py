@@ -1,0 +1,131 @@
+"""Numerical equivalences between execution paths — these are the invariants
+that make the lowering-path choices (flash scan, absorbed MLA, chunked SSD,
+expanded-KV attention) safe."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import attention as A
+from repro.models import mla, ssd
+from repro.models import inputs as I
+from repro.models.context import null_ctx
+from repro.models.model import Model
+
+f32 = jnp.float32
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_equals_naive(causal, rng):
+    B, Sq, KV, G, Dh = 2, 64, 2, 3, 16
+    q = jnp.asarray(rng.standard_normal((B, Sq, KV, G, Dh)), f32)
+    k = jnp.asarray(rng.standard_normal((B, Sq, KV, Dh)), f32)
+    v = jnp.asarray(rng.standard_normal((B, Sq, KV, Dh)), f32)
+    o1 = A.naive_attention(q, k, v, causal)
+    o2 = A.chunked_attention(q, k, v, causal, chunk=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_vjp_grads_match_naive(causal, rng):
+    B, Sq, KV, G, Dh = 2, 48, 2, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, Sq, KV, G, Dh)), f32)
+    k = jnp.asarray(rng.standard_normal((B, Sq, KV, Dh)), f32)
+    v = jnp.asarray(rng.standard_normal((B, Sq, KV, Dh)), f32)
+    f1 = lambda q, k, v: jnp.sum(jnp.sin(A.naive_attention(q, k, v, causal)))
+    f2 = lambda q, k, v: jnp.sum(jnp.sin(
+        A.flash_attention_vjp(q, k, v, causal, 16, 0, Dh ** -0.5)))
+    np.testing.assert_allclose(f1(q, k, v), f2(q, k, v), rtol=2e-5, atol=2e-5)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_expanded_kv_equals_gqa(rng):
+    """KV-head expansion (the 'expand' sharding mode) is exact."""
+    B, S, KV, G, Dh = 2, 32, 2, 4, 8
+    q = jnp.asarray(rng.standard_normal((B, S, KV, G, Dh)), f32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), f32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), f32)
+    o1 = A.naive_attention(q, k, v, True)
+    kx = jnp.repeat(k, G, axis=2)
+    vx = jnp.repeat(v, G, axis=2)
+    q4 = q.reshape(B, S, KV * G, Dh)
+    o2 = A.naive_attention(q4[:, :, :, None], kx, vx, True)
+    np.testing.assert_allclose(np.asarray(o1.reshape(B, S, KV * G, Dh)),
+                               np.asarray(o2[:, :, :, 0]), rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunked_equals_ref(rng):
+    Bb, S, H, P, N = 2, 64, 3, 8, 4
+    x = jnp.asarray(rng.standard_normal((Bb, S, H, P)), f32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (Bb, S, H)), f32)
+    Am = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), f32)
+    Bi = jnp.asarray(rng.standard_normal((Bb, S, H, N)), f32)
+    Ci = jnp.asarray(rng.standard_normal((Bb, S, H, N)), f32)
+    y1, s1 = ssd.ssd_ref(x, dt, Am, Bi, Ci)
+    y2, s2 = ssd.ssd_chunked(x, dt, Am, Bi, Ci, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_padding_exact(rng):
+    """S not divisible by chunk: dt=0 padding must be exact."""
+    Bb, S, H, P, N = 1, 37, 2, 4, 3
+    x = jnp.asarray(rng.standard_normal((Bb, S, H, P)), f32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (Bb, S, H)), f32)
+    Am = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), f32)
+    Bi = jnp.asarray(rng.standard_normal((Bb, S, H, N)), f32)
+    Ci = jnp.asarray(rng.standard_normal((Bb, S, H, N)), f32)
+    y1, s1 = ssd.ssd_ref(x, dt, Am, Bi, Ci)
+    y2, s2 = ssd.ssd_chunked(x, dt, Am, Bi, Ci, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_mla_train_equals_absorbed(rng):
+    cfg = dataclasses.replace(get_config("deepseek-v2-236b", reduced=True),
+                              dtype="float32")
+    p = mla.init_mla(jax.random.key(0), cfg)
+    ctx = null_ctx(attn_chunk=16)
+    ctx.rules = {"mla_materialized": True}  # force the per-head K/V path
+    xs = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)) * 0.1, f32)
+    pos = jnp.arange(32)
+    o_train = mla.mla_train(xs, p, cfg, pos, ctx)
+    o_pre, cache = mla.mla_prefill(xs, p, cfg, pos, null_ctx(attn_chunk=16))
+    np.testing.assert_allclose(np.asarray(o_train), np.asarray(o_pre),
+                               rtol=2e-4, atol=2e-4)
+    assert cache["c_kv"].shape == (2, 32, cfg.kv_lora_rank)
+
+
+ARCHS_DECODE = ["qwen3-32b", "deepseek-v2-236b", "grok-1-314b", "mamba2-130m",
+                "zamba2-1.2b", "whisper-base", "pixtral-12b", "qwen1.5-0.5b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS_DECODE)
+def test_decode_matches_full_forward(arch, rng):
+    """Incremental decode (prefill S-1 + one decode step) == full forward."""
+    cfg = dataclasses.replace(get_config(arch, reduced=True), dtype="float32")
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    m = Model(cfg)
+    params = jax.jit(m.init)(jax.random.key(2))
+    B, S = 2, 24
+    batch = I.sample_train_batch(rng, cfg, B, S)
+    ctx = null_ctx(attn_chunk=8, remat="none")
+    logits_full, _ = jax.jit(lambda p, b: m.forward(p, b, ctx))(params, batch)
+    pre = {k_: v_ for k_, v_ in batch.items() if k_ != "labels"}
+    pre["tokens"] = pre["tokens"][:, :-1]
+    lg_pre, cache = jax.jit(lambda p, b: m.prefill(p, b, ctx, cache_len=S))(params, pre)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, -1]),
+                               np.asarray(logits_full[:, -2]), rtol=2e-4, atol=2e-4)
+    lg_dec, _ = jax.jit(lambda p, c, t: m.decode_step(p, c, t, jnp.int32(S - 1), ctx))(
+        params, cache, batch["tokens"][:, -1:])
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0]),
+                               np.asarray(logits_full[:, -1]), rtol=3e-4, atol=3e-4)

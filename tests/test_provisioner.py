@@ -1,0 +1,74 @@
+"""Provisioner (Eq. 1-2) and the online perf matrix M (Algorithm 1 l.36)."""
+
+import numpy as np
+import pytest
+
+from repro.core.market import DEFAULT_POOL, HOUR, SpotMarket
+from repro.core.provisioner import Choice, PerfModel, Provisioner, ZeroRevPred
+from repro.core.trial import WORKLOADS, make_trials
+
+
+@pytest.fixture
+def setup():
+    market = SpotMarket(days=2, seed=9)
+    perf = PerfModel(market.pool)
+    prov = Provisioner(market, ZeroRevPred(), perf, seed=0)
+    trial = make_trials(WORKLOADS[0])[0]
+    return market, perf, prov, trial
+
+
+def test_perf_model_chip_count_init(setup):
+    _, perf, _, trial = setup
+    # paper: M initialized from the core/chip count; TPU adaptation uses a
+    # sublinear exponent (see PerfModel docstring / DESIGN.md §2)
+    for inst in DEFAULT_POOL:
+        assert perf.get(inst, trial) == pytest.approx(
+            perf.c0 / inst.chips ** perf.prior_exp)
+    # monotone: more chips -> faster prior
+    priors = [perf.get(i, trial) for i in sorted(DEFAULT_POOL, key=lambda x: x.chips)]
+    assert all(a >= b for a, b in zip(priors, priors[1:]))
+
+
+def test_perf_model_ewma_update(setup):
+    _, perf, _, trial = setup
+    inst = DEFAULT_POOL[0]
+    perf.update(inst, trial, 2.0)
+    assert perf.get(inst, trial) == pytest.approx(2.0)  # first obs replaces prior
+    perf.update(inst, trial, 4.0)
+    assert perf.get(inst, trial) == pytest.approx(0.5 * 2.0 + 0.5 * 4.0)
+
+
+def test_best_instance_is_argmin_of_eq2(setup):
+    market, perf, prov, trial = setup
+    t = 3 * HOUR
+    choice = prov.best_instance(t, trial)
+    # recompute all step costs with p=0: M[inst] * avg_price / 3600
+    costs = {i.name: perf.get(i, trial) * market.avg_price(i, t) / HOUR
+             for i in market.pool}
+    assert choice.step_cost <= min(costs.values()) + 1e-9
+    assert isinstance(choice, Choice)
+    assert choice.max_price > market.price(choice.inst, t)
+
+
+def test_revocation_probability_discounts_cost(setup):
+    market, perf, _, trial = setup
+
+    class HalfP:
+        def predict(self, inst, t, mp):
+            return 0.5
+
+    prov = Provisioner(market, HalfP(), perf, seed=0)
+    t = 3 * HOUR
+    c = prov.best_instance(t, trial)
+    # Eq. 2: step cost halves under p=0.5 vs p=0
+    p0 = Provisioner(market, ZeroRevPred(), perf, seed=0).best_instance(t, trial)
+    assert c.step_cost == pytest.approx(0.5 * p0.step_cost, rel=0.3)
+
+
+def test_exclude_set(setup):
+    market, perf, prov, trial = setup
+    t = HOUR
+    all_names = {i.name for i in market.pool}
+    first = prov.best_instance(t, trial).inst.name
+    second = prov.best_instance(t, trial, exclude={first}).inst.name
+    assert second != first and second in all_names

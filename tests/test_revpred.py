@@ -1,0 +1,103 @@
+"""RevPred (paper §III-B): Algorithm 2 preprocessing, Eq. 3 calibration,
+feature engineering, model training."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import market as mkt
+from repro.core.revpred import (HISTORY, N_FEAT, algorithm2_delta,
+                                build_dataset, eq3_correct, evaluate,
+                                label_revoked, trace_features, train_model,
+                                init_revpred, revpred_logits, init_logreg,
+                                logreg_logits, weighted_bce)
+
+
+def test_algorithm2_trimmed_mean():
+    # constant price -> zero delta
+    trace = np.full(200, 1.0, np.float32)
+    assert algorithm2_delta(trace, 100) == 0.0
+    # alternating jumps of 0.1 -> trimmed mean == 0.1
+    trace = np.array([1.0, 1.1] * 100, np.float32)
+    d = algorithm2_delta(trace, 150)
+    assert abs(d - 0.1) < 1e-6
+
+
+def test_algorithm2_trims_outliers():
+    rng = np.random.default_rng(0)
+    trace = np.cumsum(rng.normal(0, 0.01, 300)).astype(np.float32) + 5.0
+    trace[120] += 50.0  # one huge spike inside the window
+    d_with = algorithm2_delta(trace, 160)
+    assert d_with < 1.0  # the 20% trim removed the spike's deltas
+
+
+def test_label_revoked():
+    trace = np.full(300, 1.0, np.float32)
+    trace[150] = 2.0
+    assert label_revoked(trace, 120, 1.5)       # spike within next hour
+    assert not label_revoked(trace, 120, 3.0)   # max price above spike
+    assert not label_revoked(trace, 200, 1.5)   # spike already past
+
+
+def test_trace_features_shape_and_ranges():
+    rng = np.random.default_rng(0)
+    trace = (1.0 + 0.1 * rng.random(500)).astype(np.float32)
+    f = trace_features(trace, od_price=2.0)
+    assert f.shape == (500, N_FEAT)
+    assert np.all(f[:, 0] <= 1.0)        # normalized by on-demand
+    assert np.all((f[:, 4] == 0) | (f[:, 4] == 1))
+    assert np.all(f[:, 5] < 1.0)
+
+
+@given(st.floats(0.001, 0.999), st.floats(0.001, 0.999))
+@settings(max_examples=50, deadline=None)
+def test_eq3_properties(p_hat, pos_frac):
+    p = float(eq3_correct(p_hat, pos_frac))
+    assert 0.0 <= p <= 1.0
+    # balanced classes -> identity
+    if abs(pos_frac - 0.5) < 1e-9:
+        assert abs(p - p_hat) < 1e-6
+    # rarer positives -> corrected probability shrinks
+    if pos_frac < 0.5 - 1e-6:
+        assert p >= p_hat - 1e-6
+
+
+def test_weighted_bce_balances_classes():
+    import jax.numpy as jnp
+    logits = jnp.zeros((10,))
+    labels = jnp.asarray([1.0] + [0.0] * 9)
+    # with pos_frac=0.1, positive errors get weight 0.9, negative 0.1
+    l = float(weighted_bce(logits, labels, 0.1))
+    assert np.isfinite(l) and l > 0
+
+
+def test_dataset_and_training_improves_over_chance():
+    market = mkt.SpotMarket(days=4, seed=5)
+    inst = market.pool[0]
+    trace = market.traces[inst.name]
+    rng = np.random.default_rng(0)
+    data = build_dataset(trace, inst.od_price, 0, 3 * 1440, "algo2", rng, stride=4)
+    assert set(data) == {"hist", "present", "label"}
+    assert data["hist"].shape[1:] == (HISTORY, N_FEAT)
+    assert data["present"].shape[1] == N_FEAT + 1
+    import jax
+
+    params, pf = train_model(logreg_logits, init_logreg(jax.random.key(0)),
+                             data, epochs=3, weighted=False)
+    from repro.core.revpred import TrainedPredictor
+
+    pred = TrainedPredictor(logreg_logits, params, pf, use_eq3=False)
+    m = evaluate(pred, data)
+    base = max(m["pos_rate"], 1 - m["pos_rate"])
+    assert m["accuracy"] >= base - 0.15
+    assert m["f1"] >= 0.0
+
+
+def test_revpred_lstm_shapes():
+    import jax
+
+    params = init_revpred(jax.random.key(0), hidden=16)
+    hist = np.zeros((3, HISTORY, N_FEAT), np.float32)
+    present = np.zeros((3, N_FEAT + 1), np.float32)
+    lg = revpred_logits(params, hist, present)
+    assert lg.shape == (3,)
