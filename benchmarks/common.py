@@ -1,5 +1,7 @@
 """Shared benchmark plumbing: the four approaches of paper Fig. 7, run over
-fresh market replicas so billing never leaks across approaches."""
+fresh market replicas so billing never leaks across approaches.  SpotTune
+runs go through the pluggable tuner API (ExecutionEngine + SpotTuneScheduler
++ ListSearcher), which reproduces the legacy orchestrator bit-for-bit."""
 
 from __future__ import annotations
 
@@ -8,8 +10,10 @@ import time
 import numpy as np
 
 from repro.core.market import SpotMarket
-from repro.core.orchestrator import RunResult, build_spottune, run_single_spot_baseline
+from repro.core.orchestrator import RunResult, run_single_spot_baseline
 from repro.core.trial import SimTrialBackend, Workload, make_trials
+from repro.tuner import (ListSearcher, Scheduler, Searcher,
+                         SpotTuneScheduler, Tuner, build_engine)
 
 MARKET_DAYS = 12
 MARKET_SEED = 3
@@ -17,6 +21,14 @@ MARKET_SEED = 3
 
 def fresh_market(seed: int = MARKET_SEED, **kw) -> SpotMarket:
     return SpotMarket(days=MARKET_DAYS, seed=seed, **kw)
+
+
+def build_tuner(market: SpotMarket, backend: SimTrialBackend, revpred,
+                scheduler: Scheduler, searcher: Searcher, seed: int = 0,
+                **engine_kw) -> Tuner:
+    """Engine + policy in one call — the benchmarks' common construction."""
+    engine = build_engine(market, backend, revpred, seed=seed, **engine_kw)
+    return Tuner(engine, scheduler, searcher)
 
 
 def run_approaches(workload: Workload, revpred_factory, thetas=(0.7, 1.0),
@@ -32,9 +44,10 @@ def run_approaches(workload: Workload, revpred_factory, thetas=(0.7, 1.0),
     for theta in thetas:
         m = fresh_market()
         rp = revpred_factory(m)
-        orch = build_spottune(trials, m, backend, rp, theta=theta,
-                              mcnt=3, seed=seed)
-        out[f"spottune_{theta}"] = orch.run()
+        tuner = build_tuner(m, backend, rp,
+                            SpotTuneScheduler(theta=theta, mcnt=3, seed=seed),
+                            ListSearcher(trials), seed=seed)
+        out[f"spottune_{theta}"] = tuner.run()
     m = fresh_market()
     cheapest = min(m.pool, key=lambda i: i.od_price)
     out["single_cheapest"] = run_single_spot_baseline(m, backend, trials, cheapest)

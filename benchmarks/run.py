@@ -16,12 +16,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,fig12,roofline")
+                    help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,fig12,"
+                         "asha,roofline")
     args = ap.parse_args()
 
-    from benchmarks import (fig6_profiling, fig7_cost_perf, fig8_theta,
-                            fig9_refund, fig10_revpred, fig11_earlycurve,
-                            fig12_checkpoint, roofline_report)
+    from benchmarks import (asha_compare, fig6_profiling, fig7_cost_perf,
+                            fig8_theta, fig9_refund, fig10_revpred,
+                            fig11_earlycurve, fig12_checkpoint,
+                            roofline_report)
     from repro.core.trial import WORKLOADS
 
     quick_w = WORKLOADS[:2]
@@ -39,6 +41,8 @@ def main() -> None:
         "fig11": lambda: fig11_earlycurve.run(real=not args.quick),
         "fig12": lambda: fig12_checkpoint.run(
             workloads=quick_w if args.quick else None),
+        "asha": lambda: asha_compare.run(
+            workloads=quick_w[:1] if args.quick else None),
         "roofline": lambda: roofline_report.run(),
     }
     only = set(args.only.split(",")) if args.only else set(suite)

@@ -10,20 +10,21 @@ config) over a small HP grid with ACTUAL train steps on this machine:
   * on revocation the trial checkpoints to the (throttled) object store and
     is re-deployed on the provisioner's next Eq.-2 pick, restoring from the
     checkpoint (elastic restart — the paper's core mechanism);
-  * at theta x max_steps EarlyCurve predicts finals; the top-mcnt trials
-    continue to completion from their checkpoints.
+  * the *search policy* is the pluggable ``SpotTuneScheduler``
+    (repro.tuner): each trial's theta-fraction budget comes from
+    ``on_trial_added``, metric points are fed to it as ``MetricReported``
+    events (a STOP answer = plateau early-shutdown), and the
+    ``on_idle`` promotion round picks the top-mcnt trials to continue to
+    completion from their checkpoints — the same scheduler object that
+    drives the simulation engine, here driving real training.
 
     PYTHONPATH=src python examples/e2e_hpt_train.py --small       # ~2 min
     PYTHONPATH=src python examples/e2e_hpt_train.py               # ~100M params
 """
 
 import argparse
-import dataclasses
 import os
 import tempfile
-import time
-
-import numpy as np
 
 from repro.checkpoint import CheckpointManager, LocalObjectStore, ThrottledStore
 from repro.checkpoint.checkpointer import tree_bytes
@@ -35,6 +36,8 @@ from repro.core.revpred import OracleRevPred
 from repro.core.trial import TrialSpec, Workload
 from repro.launch.train import Trainer
 from repro.optim.schedules import exponential_decay_schedule
+from repro.tuner import (DecisionKind, MetricReported, SpotTuneScheduler,
+                         TrialView)
 
 
 def lm_100m():
@@ -82,7 +85,10 @@ def main():
     store = ThrottledStore(LocalObjectStore(
         os.path.join(tempfile.mkdtemp(prefix="spottune_s3_"), "bucket")),
         bandwidth_bps=134.22e6, latency_s=0.05, simulate=True)
-    ec = EarlyCurve(min_points=4)
+
+    # the paper's policy, as a pluggable scheduler over real training
+    sched = SpotTuneScheduler(theta=args.theta, mcnt=args.mcnt,
+                              earlycurve=EarlyCurve(min_points=4), seed=0)
 
     # real seconds/step measured on THIS machine correspond to the 8-chip
     # reference slice; other slices scale virtual time by chips^0.5
@@ -90,32 +96,54 @@ def main():
         return (inst.chips / 8.0) ** 0.5
 
     t_virtual = 4 * HOUR  # market entry time
-    results = {}
     trainers = {}
-    target = int(args.theta * max_steps)
+    views = []
     for i, hp in enumerate(hps):
-        sched = exponential_decay_schedule(hp["lr"], hp["dr"], hp["ds"])
+        spec = TrialSpec(workload, hp, i)
+        view = TrialView(spec, target_steps=sched.on_trial_added(spec))
+        views.append(view)
+        sched_stop = False
+
+        schedfn = exponential_decay_schedule(hp["lr"], hp["dr"], hp["ds"])
         mgr = CheckpointManager(store, f"hp{i:02d}", save_interval_steps=10**9,
                                 keep_n=2)
-        tr = Trainer(cfg, batch=batch, seq=seq, seed=0, lr_schedule=sched,
+        tr = Trainer(cfg, batch=batch, seq=seq, seed=0, lr_schedule=schedfn,
                      ckpt=mgr, val_every=val_every)
         trainers[i] = tr
-        spec = TrialSpec(workload, hp, i)
+        # the trainer owns the metric history; the scheduler sees it live
+        view.metrics_steps = tr.metrics_steps
+        view.metrics_vals = tr.metrics_vals
         cost0 = market.billed
         t = t_virtual
-        while tr.step < target:
+        while tr.step < view.target_steps and not sched_stop:
             choice = prov.best_instance(t, spec)
             alloc = market.acquire(choice.inst, choice.max_price, t)
             t += 60.0 + (store.transfer_time(tree_bytes(tr.state))
                          if tr.step else 0.0)  # deploy + restore
             if tr.step:
                 tr.restore()
-            # run until revocation notice / hour rotation / finish
+                # restore() rebuilds the metric lists; re-alias the view
+                view.metrics_steps = tr.metrics_steps
+                view.metrics_vals = tr.metrics_vals
+            # run until revocation notice / hour rotation / finish / STOP
             sf = speed_factor(choice.inst)
-            while tr.step < target:
-                tr.run_steps(min(val_every, target - tr.step))
+            while tr.step < view.target_steps:
+                done = len(tr.metrics_vals)
+                tr.run_steps(min(val_every, int(view.target_steps) - tr.step))
                 t += tr.mean_step_time() * val_every / sf
+                view.steps = tr.step
                 perf.update(choice.inst, spec, tr.mean_step_time() / sf)
+                for step, val in zip(tr.metrics_steps[done:],
+                                     tr.metrics_vals[done:]):
+                    d = sched.on_event(MetricReported(t, view.key, step, val),
+                                       view)
+                    if d.kind == DecisionKind.STOP:
+                        sched_stop = view.stopped = True
+                if sched_stop:
+                    tr.save()
+                    market.release(alloc, t, revoked=False)
+                    print(f"  hp{i:02d}: plateau STOP at step {tr.step}")
+                    break
                 notice = market.notice_time(alloc)
                 if notice is not None and t >= notice:
                     tr.save()                       # checkpoint on notice
@@ -133,26 +161,34 @@ def main():
             else:
                 tr.save()
                 market.release(alloc, t, revoked=False)
-        pred = ec.predict_final(tr.metrics_steps, tr.metrics_vals, max_steps)
-        results[i] = pred
+        view.steps = tr.step
         print(f"  hp{i:02d} lr={hp['lr']:g} dr={hp['dr']:g}: "
               f"loss@{tr.step}={tr.metrics_vals[-1]:.4f} "
-              f"predicted final={pred:.4f} "
               f"virtual cost=${market.billed - cost0:.2f}")
 
-    ranked = sorted(results, key=results.get)
-    winners = ranked[: args.mcnt]
-    print(f"\nEarlyCurve ranking: {ranked}; continuing top-{args.mcnt}: {winners}")
-    for i in winners:
+    # phase 2: the scheduler predicts finals and promotes the top-mcnt
+    promotions = sched.on_idle(views)
+    preds = sched.predictions(views)
+    ranked = sched.rank(views)
+    print(f"\nEarlyCurve predictions: "
+          f"{ {k: round(v, 4) for k, v in preds.items()} }")
+    print(f"ranking: {ranked}; continuing top-{args.mcnt}: {list(promotions)}")
+    for view in views:
+        if view.key not in promotions:
+            continue
+        i = view.spec.idx
         tr = trainers[i]
-        tr.run_steps(max_steps - tr.step)
+        view.target_steps = promotions[view.key]
+        tr.run_steps(int(view.target_steps) - tr.step)
+        view.steps = tr.step
         print(f"  hp{i:02d} final loss@{tr.step}: {tr.metrics_vals[-1]:.4f}")
 
     print(f"\nTOTAL billed=${market.billed:.2f} refunded=${market.refunded:.2f} "
           f"(ckpt store wrote {store.inner.bytes_written/1e6:.1f} MB, "
           f"simulated transfer {store.simulated_time:.1f}s)")
-    best = winners[0]
-    print(f"selected model: hp{best:02d} {hps[best]}")
+    best = ranked[0]
+    best_i = [v.spec.idx for v in views if v.key == best][0]
+    print(f"selected model: hp{best_i:02d} {hps[best_i]}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,28 @@
-"""SpotTune core: the paper's contribution.
+"""SpotTune core: the paper's contribution, split engine-from-policy.
+
+The transient-resource *mechanics* live here and in ``repro.tuner.engine``;
+the *search policy* (what to run, when to stop it) is pluggable via
+``repro.tuner`` (Scheduler/Searcher protocols — see docs/tuner_api.md):
 
 market        transient-resource market simulator (prices, revocation, refund)
 revpred       LSTM revocation-probability predictor (+ Tributary/LogReg baselines)
 earlycurve    staged training-trend prediction (+ SLAQ baseline)
 provisioner   Eq. 1-2 expected step cost, argmin instance selection
-orchestrator  Algorithm 1 event loop + single-spot baselines
+orchestrator  legacy facade (build_spottune / Orchestrator / RunResult) —
+              now a thin shim over repro.tuner's ExecutionEngine +
+              SpotTuneScheduler + GridSearcher; also the single-spot baselines
 trial         HP grids + simulated workload suite (paper Table II)
+
+New code should drive the split API directly::
+
+    from repro.tuner import (EngineConfig, ExecutionEngine, GridSearcher,
+                             SpotTuneScheduler, Tuner)
+    engine = ExecutionEngine(market, backend, provisioner, EngineConfig(seed=0))
+    result = Tuner(engine, SpotTuneScheduler(theta=0.7, mcnt=3),
+                   GridSearcher(workload)).run()
+
+Swapping ``SpotTuneScheduler`` for ``ASHAScheduler`` (or ``GridSearcher`` for
+``RandomSearcher``) changes the search policy without touching the engine.
 """
 
 from repro.core.earlycurve import EarlyCurve, SLAQPredictor  # noqa: F401

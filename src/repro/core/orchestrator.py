@@ -1,76 +1,39 @@
-"""Orchestrator: SpotTune Algorithm 1 as a discrete-event simulation.
+"""Legacy orchestrator API — now a thin shim over ``repro.tuner``.
 
-The loop (tick = Algorithm 1's SLEEP(10 seconds)) watches three events per
-running trial, exactly as lines 16–46:
+The monolithic Algorithm-1 loop that used to live here fused two concerns:
+the *transient-resource mechanics* (market, Eq.-2 provisioning, revocation
+notices, checkpoint/rollback, first-hour refunds, 1-hour rotation) and the
+*search policy* (exhaustive grid, θ-fraction budgets, EarlyCurve top-``mcnt``
+continuation).  Those are now separate, pluggable pieces:
 
-  * revocation notice (2 min ahead): checkpoint to the object store; on the
-    actual revocation the trial rolls back to the checkpoint (work done
-    inside the notice window is lost), the allocation is released — refunded
-    if it lived < 1 h — and the trial is requeued;
-  * trial finished (θ·max_trial_steps reached, or the metric plateaued —
-    the paper's early-convergence special case): checkpoint + shutdown;
-  * one-hour occupancy: *proactive* checkpoint + voluntary shutdown +
-    requeue — losing the current refund lottery ticket but buying a fresh
-    market decision and a new first-hour window.
+  repro.tuner.engine.ExecutionEngine   the mechanics, policy-free
+  repro.tuner.spottune.SpotTuneScheduler   the paper's policy, as a Scheduler
+  repro.tuner.searchers.GridSearcher   the paper's 2^4 grid, as a Searcher
+  repro.tuner.tuner.Tuner              the facade tying them together
 
-Waiting trials are (re)deployed via the Provisioner (Eq. 2 argmin) with
-checkpoint-restore + VM-startup latency charged before compute resumes.
+``Orchestrator``, ``OrchestratorConfig``, ``RunResult`` and
+``build_spottune`` keep their exact legacy behavior (bit-for-bit on the same
+seeds — pinned by tests/test_tuner.py) by delegating to that stack.  New code
+should construct the Tuner directly; see docs/tuner_api.md.
 
-Phase 2 (lines 48–53): when θ < 1, EarlyCurve predicts every trial's final
-metric, the top-``mcnt`` trials continue from their checkpoints to
-max_trial_steps, and the selection accuracy against the ground-truth ranking
-is recorded.
-
-Beyond-paper (flagged, off by default): straggler mitigation — a trial whose
-observed step time exceeds ``straggler_factor``× the best pool prediction is
-proactively re-placed (the paper's 1-hour rotation catches stragglers only at
-hour boundaries).
+The single-spot baselines (paper §IV-A4) still live here: one dedicated spot
+instance per trial, maximum price far above market (never revoked), full
+training, no early shutdown.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import enum
-import math
-from typing import Dict, List, Optional
-
-import numpy as np
+from typing import List, Optional
 
 from repro.core.earlycurve import EarlyCurve
-from repro.core.market import HOUR, Allocation, InstanceType, SpotMarket
-from repro.core.provisioner import Choice, PerfModel, Provisioner
+from repro.core.market import InstanceType, SpotMarket
+from repro.core.provisioner import PerfModel, Provisioner
 from repro.core.trial import SimTrialBackend, TrialSpec
-
-
-class Status(enum.Enum):
-    WAITING = "waiting"
-    RUNNING = "running"
-    FINISHED = "finished"
-
-
-@dataclasses.dataclass
-class TrialState:
-    spec: TrialSpec
-    target_steps: float
-    steps: float = 0.0
-    ckpt_steps: float = 0.0
-    status: Status = Status.WAITING
-    alloc: Optional[Allocation] = None
-    choice: Optional[Choice] = None
-    ready_at: float = 0.0
-    notice_handled: bool = False
-    alloc_start_steps: float = 0.0
-    metrics_steps: List[int] = dataclasses.field(default_factory=list)
-    metrics_vals: List[float] = dataclasses.field(default_factory=list)
-    free_steps: float = 0.0
-    lost_steps: float = 0.0
-    ckpt_seconds: float = 0.0
-    restore_seconds: float = 0.0
-    redeployments: int = 0
-    converged: bool = False
-    exclude: set = dataclasses.field(default_factory=set)
-    finish_time: float = 0.0
-    _next_val: int = 0
+from repro.tuner.engine import EngineConfig, ExecutionEngine, Status, TrialState  # noqa: F401
+from repro.tuner.searchers import ListSearcher
+from repro.tuner.spottune import SpotTuneScheduler
+from repro.tuner.tuner import RunResult, Tuner  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass
@@ -85,39 +48,18 @@ class OrchestratorConfig:
     max_sim_s: float = 10 * 24 * 3600.0
     seed: int = 0
 
-
-@dataclasses.dataclass
-class RunResult:
-    cost: float
-    refunded: float
-    jct: float
-    steps_total: float
-    free_steps: float
-    lost_steps: float
-    ckpt_seconds: float
-    restore_seconds: float
-    redeployments: int
-    predicted_rank: List[str]
-    true_rank: List[str]
-    top1_correct: bool
-    top3_contains_best: bool
-    pred_errors: Dict[str, float]
-    per_trial_steps: Dict[str, float]
-    events: List[tuple]
-
-    @property
-    def free_frac(self) -> float:
-        return self.free_steps / max(self.steps_total, 1.0)
-
-    @property
-    def ckpt_frac(self) -> float:
-        return (self.ckpt_seconds + self.restore_seconds) / max(self.jct, 1e-9)
-
-    def pcr(self, alpha: float = 1.0) -> float:
-        return alpha / max(self.jct * max(self.cost, 1e-9), 1e-12)
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(
+            tick_s=self.tick_s, deploy_delay_s=self.deploy_delay_s,
+            ckpt_bandwidth_bps=self.ckpt_bandwidth_bps, notice_s=self.notice_s,
+            straggler_factor=self.straggler_factor, max_sim_s=self.max_sim_s,
+            seed=self.seed)
 
 
 class Orchestrator:
+    """Legacy facade: pre-built trial list + OrchestratorConfig in,
+    RunResult out.  Equivalent to Tuner(engine, SpotTuneScheduler, ListSearcher)."""
+
     def __init__(self, market: SpotMarket, backend: SimTrialBackend,
                  provisioner: Provisioner, trials: List[TrialSpec],
                  config: OrchestratorConfig, earlycurve: Optional[EarlyCurve] = None):
@@ -126,192 +68,33 @@ class Orchestrator:
         self.prov = provisioner
         self.cfg = config
         self.ec = earlycurve or EarlyCurve()
-        w = trials[0].workload
-        self.max_steps = w.max_trial_steps
-        self.states = [
-            TrialState(t, target_steps=math.floor(config.theta * w.max_trial_steps))
-            for t in trials]
-        self.rng = np.random.default_rng(config.seed)
-        self.events: List[tuple] = []
-        self.t = 0.0
+        self.max_steps = trials[0].workload.max_trial_steps
+        self.engine = ExecutionEngine(market, backend, provisioner,
+                                      config.engine_config())
+        self.tuner = Tuner(
+            self.engine,
+            SpotTuneScheduler(theta=config.theta, mcnt=config.mcnt,
+                              earlycurve=self.ec, seed=config.seed),
+            ListSearcher(trials))
 
-    # ------------------------------------------------------------- helpers
-    def _ckpt_time(self, st: TrialState) -> float:
-        return self.backend.model_bytes(st.spec) / self.cfg.ckpt_bandwidth_bps
+    @property
+    def states(self) -> List[TrialState]:
+        return self.engine.states
 
-    def _checkpoint(self, st: TrialState):
-        st.ckpt_steps = st.steps
-        st.ckpt_seconds += self._ckpt_time(st)
+    @property
+    def events(self) -> List[tuple]:
+        return self.engine.events
 
-    def _release(self, st: TrialState, revoked: bool):
-        rec = self.market.release(st.alloc, self.t, revoked=revoked)
-        steps_this_alloc = st.ckpt_steps - st.alloc_start_steps
-        if rec["refund"] > 0:
-            st.free_steps += max(steps_this_alloc, 0.0)
-        self.events.append((self.t, "release", st.spec.key, rec))
-        st.alloc = None
-        st.choice = None
-        st.notice_handled = False
+    @property
+    def t(self) -> float:
+        return self.engine.t
 
-    def _deploy(self, st: TrialState):
-        choice = self.prov.best_instance(self.t, st.spec, exclude=st.exclude or None)
-        st.exclude = set()
-        alloc = self.market.acquire(choice.inst, choice.max_price, self.t)
-        st.alloc = alloc
-        st.choice = choice
-        restore = self._ckpt_time(st) if st.steps > 0 else 0.0
-        st.restore_seconds += restore
-        st.ready_at = self.t + self.cfg.deploy_delay_s + restore
-        st.alloc_start_steps = st.steps
-        st.status = Status.RUNNING
-        st.redeployments += 1
-        self.events.append((self.t, "deploy", st.spec.key, choice.inst.name,
-                            round(choice.max_price, 4), round(choice.p_revoke, 3)))
-
-    def _advance(self, st: TrialState, dt: float):
-        inst = st.alloc.inst
-        true_spt = self.backend.step_time(st.spec, inst)
-        gained = dt / true_spt
-        st.steps = min(st.steps + gained, st.target_steps)
-        # observed seconds/step -> perf-matrix update (Algorithm 1 line 36)
-        obs = self.backend.step_time(st.spec, inst, noisy_t=self.t)
-        self.prov.perf.update(inst, st.spec, obs)
-        # metric points crossed
-        w = st.spec.workload
-        while (st._next_val + 1) * w.val_every <= st.steps:
-            st._next_val += 1
-            step = st._next_val * w.val_every
-            val = self.backend.metric_at(st.spec, step)
-            if val is not None:
-                st.metrics_steps.append(step)
-                st.metrics_vals.append(val)
-        # convergence plateau (paper §III-C special case)
-        if not st.converged and len(st.metrics_vals) >= self.ec.plateau_window:
-            if self.ec.converged(st.metrics_vals):
-                st.converged = True
-
-    # ----------------------------------------------------------- main loop
-    def _loop(self, active: List[TrialState]):
-        cfg = self.cfg
-        while True:
-            unfinished = [s for s in active if s.status != Status.FINISHED]
-            if not unfinished:
-                return
-            if self.t > cfg.max_sim_s or self.t >= self.market.horizon_s() - HOUR:
-                raise RuntimeError("simulation horizon exhausted")
-            for st in unfinished:
-                if st.status == Status.RUNNING:
-                    run_from = max(st.ready_at, self.t - cfg.tick_s)
-                    dt = self.t - run_from
-                    if dt > 0:
-                        self._advance(st, dt)
-
-                    a = st.alloc
-                    # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26)
-                    if a.t_revoke is not None and not st.notice_handled \
-                            and self.t >= a.t_revoke - cfg.notice_s:
-                        self._checkpoint(st)
-                        st.notice_handled = True
-                        self.events.append((self.t, "notice", st.spec.key))
-                    # revocation fires
-                    if a.t_revoke is not None and self.t >= a.t_revoke:
-                        st.lost_steps += st.steps - st.ckpt_steps
-                        st.steps = st.ckpt_steps      # roll back to checkpoint
-                        st._next_val = int(st.steps // st.spec.workload.val_every)
-                        n = int(st._next_val)
-                        st.metrics_steps = st.metrics_steps[:n]
-                        st.metrics_vals = st.metrics_vals[:n]
-                        self._release(st, revoked=True)
-                        st.status = Status.WAITING
-                        continue
-                    # (2) finished (l.27-30)
-                    if st.steps >= st.target_steps or st.converged:
-                        self._checkpoint(st)
-                        self._release(st, revoked=False)
-                        st.status = Status.FINISHED
-                        st.finish_time = self.t + self._ckpt_time(st)
-                        self.events.append((self.t, "finish", st.spec.key, st.steps))
-                        continue
-                    # (3) one-hour proactive rotation (l.31-34)
-                    if self.t - a.t_start >= HOUR:
-                        self._checkpoint(st)
-                        self._release(st, revoked=False)
-                        st.status = Status.WAITING
-                        self.events.append((self.t, "rotate", st.spec.key))
-                        continue
-                    # beyond-paper: straggler re-placement
-                    if cfg.straggler_factor > 1.0 and self.t >= st.ready_at + 60:
-                        best_pred = min(self.prov.perf.get(i, st.spec)
-                                        for i in self.market.pool)
-                        obs = self.backend.step_time(st.spec, a.inst)
-                        if obs > cfg.straggler_factor * best_pred:
-                            self._checkpoint(st)
-                            st.exclude = {a.inst.name}
-                            self._release(st, revoked=False)
-                            st.status = Status.WAITING
-                            self.events.append((self.t, "straggler", st.spec.key))
-                            continue
-
-            for st in unfinished:
-                if st.status == Status.WAITING:
-                    self._deploy(st)
-            self.t += cfg.tick_s
-
-    # ------------------------------------------------------------- results
     def run(self) -> RunResult:
-        active = list(self.states)
-        self._loop(active)
-
-        # phase 2: predict finals, continue top-mcnt (Algorithm 1 l.48-53)
-        preds: Dict[str, float] = {}
-        for st in self.states:
-            if self.cfg.theta >= 1.0 or st.converged:
-                preds[st.spec.key] = st.metrics_vals[-1] if st.metrics_vals else 1e9
-            else:
-                preds[st.spec.key] = self.ec.predict_final(
-                    st.metrics_steps, st.metrics_vals, self.max_steps,
-                    seed=self.cfg.seed)
-        order = sorted(self.states, key=lambda s: preds[s.spec.key])
-        predicted_rank = [s.spec.key for s in order]
-
-        if self.cfg.theta < 1.0:
-            cont = order[: self.cfg.mcnt]
-            for st in cont:
-                if not st.converged and st.steps < self.max_steps:
-                    st.target_steps = self.max_steps
-                    st.status = Status.WAITING
-            self._loop(cont)
-
-        true_finals = {s.spec.key: self.backend.true_final(s.spec)
-                       for s in self.states}
-        true_rank = [k for k, _ in sorted(true_finals.items(), key=lambda kv: kv[1])]
-        pred_errors = {
-            k: abs(preds[k] - true_finals[k]) / max(abs(true_finals[k]), 1e-9)
-            for k in preds}
-
-        return RunResult(
-            cost=self.market.billed,
-            refunded=self.market.refunded,
-            jct=max([s.finish_time for s in self.states] + [self.t]),
-            steps_total=sum(s.steps for s in self.states),
-            free_steps=sum(s.free_steps for s in self.states),
-            lost_steps=sum(s.lost_steps for s in self.states),
-            ckpt_seconds=sum(s.ckpt_seconds for s in self.states),
-            restore_seconds=sum(s.restore_seconds for s in self.states),
-            redeployments=sum(s.redeployments for s in self.states),
-            predicted_rank=predicted_rank,
-            true_rank=true_rank,
-            top1_correct=predicted_rank[0] == true_rank[0],
-            top3_contains_best=true_rank[0] in predicted_rank[:3],
-            pred_errors=pred_errors,
-            per_trial_steps={s.spec.key: s.steps for s in self.states},
-            events=self.events,
-        )
+        return self.tuner.run()
 
 
 # ---------------------------------------------------------------------------
-# baselines (paper §IV-A4): one dedicated spot instance per trial, maximum
-# price far above market (never revoked), full training, no early shutdown.
+# baselines (paper §IV-A4)
 # ---------------------------------------------------------------------------
 
 

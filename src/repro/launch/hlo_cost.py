@@ -139,13 +139,34 @@ def parse_module(text: str) -> Dict[str, Computation]:
     return comps
 
 
+def _split_top_commas(s: str) -> List[str]:
+    """Split on commas outside any bracket nesting — shape dims like
+    ``f32[32,128]{1,0}`` contain commas a naive split would cut through."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
 def _dot_flops(ins: Instr, shape_table: Dict[str, str]) -> float:
     out_dims = _first_shape_dims(ins.type_str)
     out_n = 1
     for d in out_dims:
         out_n *= d
     # lhs shape: first typed operand in args, else table lookup
-    ops = ins.args_str.split(",")
+    ops = _split_top_commas(ins.args_str)
     lhs_type = None
     m = _SHAPE_RE.search(ops[0]) if ops else None
     if m:

@@ -17,10 +17,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models import attention as attn_lib
 from repro.models import layers, mla, moe, ssd
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.models.shard_compat import shard_map_unchecked
 
 
 # ---------------------------------------------------------------------------
@@ -111,9 +108,9 @@ def _distributed_decode(q, cache, pos, ctx):
             q_s, k_s, v_s, pos_s, seq, start,
             scale=Dh_full ** -0.5, hd_axis=hd_sp)
 
-    return shard_map(
+    return shard_map_unchecked(
         body, mesh=mesh, in_specs=(qspec, cspec, cspec, P()),
-        out_specs=qspec, check_vma=False,
+        out_specs=qspec,
     )(q, cache["k"], cache["v"], pos)
 
 

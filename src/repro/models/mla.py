@@ -177,11 +177,9 @@ def mla_decode(x, params, cfg, cache, pos, ctx):
 def _distributed_mla_decode(q_eff, cache, pos, ctx, scale):
     """Flash-decode over the sequence-sharded compressed cache (MQA form:
     one shared 576-dim key head, G = n_heads query groups)."""
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map  # type: ignore
     from jax.sharding import PartitionSpec as P
+
+    from repro.models.shard_compat import shard_map_unchecked
 
     plan = ctx.decode_plan
     seq = tuple(plan.seq_axes)
@@ -197,8 +195,8 @@ def _distributed_mla_decode(q_eff, cache, pos, ctx, scale):
             q_s[:, :, None], k_s, v_s, pos_s, seq, start, scale=scale)
         return o[:, :, 0]                                            # (B,1,H,R)
 
-    return shard_map(
+    return shard_map_unchecked(
         body, mesh=ctx.mesh,
         in_specs=(qspec, ckv_spec, ckv_spec, P()),
-        out_specs=qspec, check_vma=False,
+        out_specs=qspec,
     )(q_eff, cache["c_kv"], cache["k_rope"], pos)

@@ -47,10 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models import layers
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.models.shard_compat import shard_map_unchecked
 
 
 def init_moe(key, cfg):
@@ -241,9 +238,8 @@ def moe_ffn(x, params, cfg, ctx):
                 fsdp_axis=faxis, data_axes=tuple(ctx.data_axes),
                 strategy=strategy, sp=sp)
 
-        y, aux = shard_map(
+        y, aux = shard_map_unchecked(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
         )(x, params["router"], params["w_gate"], params["w_up"],
           params["w_down"])
 

@@ -1,0 +1,23 @@
+"""Pluggable tuner: transient-resource engine x search policy.
+
+engine      policy-free execution engine (market, provisioning,
+            checkpoint/restore, refunds) + EngineConfig, TrialState, Status
+events      typed trial lifecycle events the engine emits
+scheduler   Scheduler/Searcher protocols, Decision vocabulary, TrialView
+searchers   GridSearcher / RandomSearcher / ListSearcher + ASHAScheduler
+spottune    the paper's theta + EarlyCurve top-mcnt policy as a Scheduler
+tuner       Tuner facade + RunResult
+"""
+
+from repro.tuner.engine import (EngineConfig, ExecutionEngine, Status,  # noqa: F401
+                                TrialState, build_engine)
+from repro.tuner.events import (HourRotation, MetricReported,  # noqa: F401
+                                RevocationNotice, TrialEvent, TrialFinished,
+                                TrialRevoked, TrialStarted)
+from repro.tuner.scheduler import (CONTINUE, PAUSE, PROMOTE, STOP,  # noqa: F401
+                                   Decision, DecisionKind, Scheduler, Searcher,
+                                   TrialView)
+from repro.tuner.searchers import (ASHAScheduler, GridSearcher,  # noqa: F401
+                                   ListSearcher, RandomSearcher)
+from repro.tuner.spottune import SpotTuneScheduler  # noqa: F401
+from repro.tuner.tuner import RunResult, Tuner  # noqa: F401

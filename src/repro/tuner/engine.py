@@ -1,0 +1,324 @@
+"""Policy-free transient-resource execution engine (SpotTune Algorithm 1's
+mechanics, with the search policy factored out).
+
+The engine owns everything the paper's orchestrator did *except* the decisions
+about trial budgets and early stopping:
+
+  * cost-aware deployment of waiting trials via the Provisioner (Eq. 2
+    argmin), with VM-startup + checkpoint-restore latency charged before
+    compute resumes;
+  * revocation notices (checkpoint on notice, rollback on the revocation,
+    first-hour refund accounting, requeue);
+  * proactive 1-hour rotation (fresh market decision + a new refund window);
+  * flag-gated straggler re-placement (beyond-paper, off by default).
+
+Policy arrives through the event stream: every lifecycle transition is
+narrated as a typed event (``repro.tuner.events``) to a ``Scheduler``, whose
+``Decision``s the engine applies at exactly the points the legacy loop
+evaluated its hardcoded conditions — so a scheduler that reproduces the
+legacy conditions reproduces the legacy run bit-for-bit (seeded RNG draws
+included).  ``PAUSE`` parks a trial on its checkpoint without redeploying it;
+``take_promotions`` / ``resume`` bring parked trials back.
+
+The tick discipline (one pass per ``tick_s`` of simulated time, trials
+processed in activation order, waiting trials deployed at tick end) is kept
+verbatim from the paper's Algorithm 1 SLEEP loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+from repro.core.market import HOUR, Allocation, SpotMarket
+from repro.core.provisioner import Choice, PerfModel, Provisioner
+from repro.core.trial import SimTrialBackend, TrialSpec
+from repro.tuner.events import (HourRotation, MetricReported, RevocationNotice,
+                                TrialFinished, TrialRevoked, TrialStarted)
+from repro.tuner.scheduler import CONTINUE, Decision, DecisionKind, Scheduler
+
+
+class Status(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    PAUSED = "paused"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class TrialState:
+    spec: TrialSpec
+    target_steps: float
+    steps: float = 0.0
+    ckpt_steps: float = 0.0
+    status: Status = Status.WAITING
+    alloc: Optional[Allocation] = None
+    choice: Optional[Choice] = None
+    ready_at: float = 0.0
+    notice_handled: bool = False
+    alloc_start_steps: float = 0.0
+    metrics_steps: List[int] = dataclasses.field(default_factory=list)
+    metrics_vals: List[float] = dataclasses.field(default_factory=list)
+    free_steps: float = 0.0
+    lost_steps: float = 0.0
+    ckpt_seconds: float = 0.0
+    restore_seconds: float = 0.0
+    redeployments: int = 0
+    stopped: bool = False            # a STOP decision was applied
+    pause_requested: bool = False
+    exclude: set = dataclasses.field(default_factory=set)
+    finish_time: float = 0.0
+    _next_val: int = 0
+
+    @property
+    def key(self) -> str:
+        return self.spec.key
+
+    @property
+    def converged(self) -> bool:
+        """Legacy alias: the paper's only STOP reason was metric plateau."""
+        return self.stopped
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    tick_s: float = 10.0
+    deploy_delay_s: float = 60.0       # VM/slice startup
+    ckpt_bandwidth_bps: float = 120e6  # object-store write speed (fig12 knob)
+    notice_s: float = 120.0
+    straggler_factor: float = 0.0      # 0 = off (paper); >1 enables mitigation
+    max_sim_s: float = 10 * 24 * 3600.0
+    seed: int = 0
+
+
+def build_engine(market: SpotMarket, backend: SimTrialBackend, revpred,
+                 seed: int = 0, **engine_kw) -> "ExecutionEngine":
+    """Standard construction: fresh perf matrix + Eq.-2 provisioner around a
+    market/backend pair.  Every driver (examples, benchmarks, tests, the
+    legacy shim) wants exactly this wiring."""
+    prov = Provisioner(market, revpred, PerfModel(market.pool), seed=seed)
+    return ExecutionEngine(market, backend, prov,
+                           EngineConfig(seed=seed, **engine_kw))
+
+
+class ExecutionEngine:
+    """Runs trials on the transient market; consults a Scheduler for policy."""
+
+    def __init__(self, market: SpotMarket, backend: SimTrialBackend,
+                 provisioner: Provisioner, config: Optional[EngineConfig] = None):
+        self.market = market
+        self.backend = backend
+        self.prov = provisioner
+        self.cfg = config or EngineConfig()
+        self.scheduler: Scheduler = Scheduler()
+        self.states: List[TrialState] = []
+        self._by_key: Dict[str, TrialState] = {}
+        self._active: List[TrialState] = []
+        self.events: List[tuple] = []
+        self.t = 0.0
+
+    # ------------------------------------------------------------- trials
+    def bind(self, scheduler: Scheduler) -> None:
+        self.scheduler = scheduler
+
+    def add_trial(self, spec: TrialSpec, target_steps: float) -> TrialState:
+        assert spec.key not in self._by_key, f"duplicate trial key {spec.key}"
+        st = TrialState(spec, target_steps=target_steps)
+        self.states.append(st)
+        self._by_key[spec.key] = st
+        self._active.append(st)
+        return st
+
+    def views(self) -> List[TrialState]:
+        return list(self.states)
+
+    def resume(self, promotions: Dict[str, float]) -> None:
+        """Resume trials with new budgets; the dict order is the activation
+        (and hence deployment / RNG-consumption) order."""
+        self._active = []
+        for key, target in promotions.items():
+            st = self._by_key[key]
+            st.target_steps = target
+            st.status = Status.WAITING
+            self._active.append(st)
+
+    # ------------------------------------------------------------- helpers
+    def _ckpt_time(self, st: TrialState) -> float:
+        return self.backend.model_bytes(st.spec) / self.cfg.ckpt_bandwidth_bps
+
+    def _checkpoint(self, st: TrialState):
+        st.ckpt_steps = st.steps
+        st.ckpt_seconds += self._ckpt_time(st)
+
+    def _release(self, st: TrialState, revoked: bool) -> dict:
+        rec = self.market.release(st.alloc, self.t, revoked=revoked)
+        steps_this_alloc = st.ckpt_steps - st.alloc_start_steps
+        if rec["refund"] > 0:
+            st.free_steps += max(steps_this_alloc, 0.0)
+        self.events.append((self.t, "release", st.spec.key, rec))
+        st.alloc = None
+        st.choice = None
+        st.notice_handled = False
+        return rec
+
+    def _deploy(self, st: TrialState):
+        choice = self.prov.best_instance(self.t, st.spec, exclude=st.exclude or None)
+        st.exclude = set()
+        alloc = self.market.acquire(choice.inst, choice.max_price, self.t)
+        st.alloc = alloc
+        st.choice = choice
+        restore = self._ckpt_time(st) if st.steps > 0 else 0.0
+        st.restore_seconds += restore
+        st.ready_at = self.t + self.cfg.deploy_delay_s + restore
+        st.alloc_start_steps = st.steps
+        st.status = Status.RUNNING
+        st.redeployments += 1
+        self.events.append((self.t, "deploy", st.spec.key, choice.inst.name,
+                            round(choice.max_price, 4), round(choice.p_revoke, 3)))
+        self._dispatch(TrialStarted(self.t, st.key, choice.inst.name,
+                                    choice.max_price, choice.p_revoke), st)
+
+    def _advance(self, st: TrialState, dt: float) -> List[tuple]:
+        """Simulate ``dt`` seconds of compute; returns new (step, value)
+        metric points (already appended to the trial's history)."""
+        inst = st.alloc.inst
+        true_spt = self.backend.step_time(st.spec, inst)
+        gained = dt / true_spt
+        st.steps = min(st.steps + gained, st.target_steps)
+        # observed seconds/step -> perf-matrix update (Algorithm 1 line 36)
+        obs = self.backend.step_time(st.spec, inst, noisy_t=self.t)
+        self.prov.perf.update(inst, st.spec, obs)
+        # metric points crossed
+        w = st.spec.workload
+        new_points = []
+        while (st._next_val + 1) * w.val_every <= st.steps:
+            st._next_val += 1
+            step = st._next_val * w.val_every
+            val = self.backend.metric_at(st.spec, step)
+            if val is not None:
+                st.metrics_steps.append(step)
+                st.metrics_vals.append(val)
+                new_points.append((step, val))
+        return new_points
+
+    # ------------------------------------------------------------ decisions
+    def _dispatch(self, event, st: TrialState) -> Decision:
+        d = self.scheduler.on_event(event, st) or CONTINUE
+        if d.kind == DecisionKind.STOP:
+            st.stopped = True
+        elif d.kind == DecisionKind.PAUSE:
+            st.pause_requested = True
+        elif d.kind == DecisionKind.PROMOTE:
+            st.target_steps = d.target_steps
+        promos = self.scheduler.take_promotions()
+        if promos:
+            for key, target in promos.items():
+                self._promote(key, target)
+        return d
+
+    def _promote(self, key: str, target: float):
+        st = self._by_key[key]
+        st.target_steps = target
+        if st.status in (Status.PAUSED, Status.FINISHED):
+            st.status = Status.WAITING
+        if st not in self._active:
+            self._active.append(st)
+
+    def _park(self, st: TrialState):
+        """Apply a PAUSE that coincides with an engine-forced release (the
+        trial is already checkpointed and off its allocation)."""
+        st.pause_requested = False
+        st.status = Status.PAUSED
+        self.events.append((self.t, "pause", st.spec.key))
+
+    # ----------------------------------------------------------- main loop
+    def run_until_idle(self):
+        """Tick until no trial is running or waiting (paused trials park;
+        promotions delivered mid-run re-activate them)."""
+        cfg = self.cfg
+        while True:
+            runnable = [s for s in self._active
+                        if s.status in (Status.RUNNING, Status.WAITING)]
+            if not runnable:
+                return
+            if self.t > cfg.max_sim_s or self.t >= self.market.horizon_s() - HOUR:
+                raise RuntimeError("simulation horizon exhausted")
+            for st in runnable:
+                if st.status != Status.RUNNING:
+                    continue
+                run_from = max(st.ready_at, self.t - cfg.tick_s)
+                dt = self.t - run_from
+                if dt > 0:
+                    for step, val in self._advance(st, dt):
+                        self._dispatch(MetricReported(self.t, st.key, step, val), st)
+
+                a = st.alloc
+                # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26)
+                if a.t_revoke is not None and not st.notice_handled \
+                        and self.t >= a.t_revoke - cfg.notice_s:
+                    self._checkpoint(st)
+                    st.notice_handled = True
+                    self.events.append((self.t, "notice", st.spec.key))
+                    self._dispatch(RevocationNotice(self.t, st.key, a.t_revoke), st)
+                # revocation fires
+                if a.t_revoke is not None and self.t >= a.t_revoke:
+                    lost = st.steps - st.ckpt_steps
+                    st.lost_steps += lost
+                    st.steps = st.ckpt_steps      # roll back to checkpoint
+                    st._next_val = int(st.steps // st.spec.workload.val_every)
+                    n = int(st._next_val)
+                    st.metrics_steps = st.metrics_steps[:n]
+                    st.metrics_vals = st.metrics_vals[:n]
+                    self._release(st, revoked=True)
+                    st.status = Status.WAITING
+                    d = self._dispatch(
+                        TrialRevoked(self.t, st.key, lost, st.ckpt_steps), st)
+                    if d.kind == DecisionKind.PAUSE or st.pause_requested:
+                        self._park(st)  # free rung boundary (ASHA)
+                    continue
+                # (2) finished: target reached or a STOP decision (l.27-30)
+                if st.steps >= st.target_steps or st.stopped:
+                    st.pause_requested = False
+                    self._checkpoint(st)
+                    self._release(st, revoked=False)
+                    st.status = Status.FINISHED
+                    st.finish_time = self.t + self._ckpt_time(st)
+                    self.events.append((self.t, "finish", st.spec.key, st.steps))
+                    self._dispatch(
+                        TrialFinished(self.t, st.key, st.steps, st.stopped), st)
+                    continue
+                # scheduler-requested pause (rung boundary et al.)
+                if st.pause_requested:
+                    self._checkpoint(st)
+                    self._release(st, revoked=False)
+                    self._park(st)
+                    continue
+                # (3) one-hour proactive rotation (l.31-34)
+                if self.t - a.t_start >= HOUR:
+                    self._checkpoint(st)
+                    held = self.t - a.t_start
+                    self._release(st, revoked=False)
+                    st.status = Status.WAITING
+                    self.events.append((self.t, "rotate", st.spec.key))
+                    d = self._dispatch(HourRotation(self.t, st.key, held), st)
+                    if d.kind == DecisionKind.PAUSE or st.pause_requested:
+                        self._park(st)
+                    continue
+                # beyond-paper: straggler re-placement
+                if cfg.straggler_factor > 1.0 and self.t >= st.ready_at + 60:
+                    best_pred = min(self.prov.perf.get(i, st.spec)
+                                    for i in self.market.pool)
+                    obs = self.backend.step_time(st.spec, a.inst)
+                    if obs > cfg.straggler_factor * best_pred:
+                        self._checkpoint(st)
+                        st.exclude = {a.inst.name}
+                        self._release(st, revoked=False)
+                        st.status = Status.WAITING
+                        self.events.append((self.t, "straggler", st.spec.key))
+                        continue
+
+            for st in runnable:
+                if st.status == Status.WAITING:
+                    self._deploy(st)
+            self.t += cfg.tick_s

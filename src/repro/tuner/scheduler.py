@@ -1,0 +1,137 @@
+"""Scheduler/Searcher protocols: the policy half of the tuner split.
+
+SpotTune's engine (market + provisioning + checkpoint/restore + refund
+accounting) is policy-free; *what to run and when to stop it* is delegated to
+two pluggable pieces, syne-tune style:
+
+  Searcher   suggests trial configurations (``TrialSpec``s) — grid, random,
+             model-based, ... (``repro.tuner.searchers``)
+  Scheduler  consumes the engine's event stream (``repro.tuner.events``) and
+             returns ``Decision``s — continue, pause at a checkpoint, stop for
+             good, or promote to a larger step budget.  The paper's θ +
+             EarlyCurve policy is one such scheduler
+             (``repro.tuner.spottune.SpotTuneScheduler``); ASHA is another
+             (``repro.tuner.searchers.ASHAScheduler``).
+
+Schedulers observe trials through *views*: any object with the attributes
+``spec``, ``key``, ``steps``, ``target_steps``, ``metrics_steps``,
+``metrics_vals`` and ``stopped``.  The engine passes its own ``TrialState``;
+out-of-engine drivers (e.g. ``examples/e2e_hpt_train.py``, which runs real JAX
+training) pass the lightweight ``TrialView`` below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.trial import TrialSpec
+
+
+# ---------------------------------------------------------------------------
+# decisions
+# ---------------------------------------------------------------------------
+
+
+class DecisionKind(enum.Enum):
+    CONTINUE = "continue"   # keep running
+    PAUSE = "pause"         # checkpoint + release; park until promoted
+    STOP = "stop"           # trial is done (early): checkpoint + finish
+    PROMOTE = "promote"     # raise the trial's step budget (resumes if parked)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    kind: DecisionKind
+    target_steps: Optional[float] = None  # only for PROMOTE
+
+
+CONTINUE = Decision(DecisionKind.CONTINUE)
+PAUSE = Decision(DecisionKind.PAUSE)
+STOP = Decision(DecisionKind.STOP)
+
+
+def PROMOTE(target_steps: float) -> Decision:
+    return Decision(DecisionKind.PROMOTE, target_steps=target_steps)
+
+
+# ---------------------------------------------------------------------------
+# trial view
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrialView:
+    """Minimal duck-type of the engine's TrialState, for drivers that run
+    trials themselves (real training loops) but want engine-free policy."""
+
+    spec: TrialSpec
+    steps: float = 0.0
+    target_steps: float = 0.0
+    metrics_steps: List[int] = dataclasses.field(default_factory=list)
+    metrics_vals: List[float] = dataclasses.field(default_factory=list)
+    stopped: bool = False
+
+    @property
+    def key(self) -> str:
+        return self.spec.key
+
+
+# ---------------------------------------------------------------------------
+# protocols (as inheritable no-op base classes)
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Base scheduler: runs every trial to its workload's full budget.
+
+    Subclass hooks:
+
+      on_trial_added(spec) -> target_steps | None
+          Called once per suggested trial, before the run.  Return the initial
+          step budget (None = the workload's ``max_trial_steps``).
+      on_event(event, view) -> Decision | None
+          Called for every engine event; None is treated as CONTINUE.
+      take_promotions() -> {key: target_steps}
+          Drained by the engine after every event: asynchronous promotions of
+          *other* trials (e.g. ASHA un-pausing a rung survivor).  Order is the
+          resume order.
+      on_idle(views) -> {key: target_steps}
+          Called when no trial is running or waiting.  Return promotions to
+          resume paused/finished trials with a new budget; an empty dict ends
+          the tuning run.  Order is the (re)deployment order — it matters for
+          reproducibility because provisioning consumes seeded RNG draws.
+      predictions(views) -> {key: predicted_final_metric}
+      rank(views) -> [key, ...]   best first (lower metric = better)
+    """
+
+    def on_trial_added(self, spec: TrialSpec) -> Optional[float]:
+        return None
+
+    def on_event(self, event, view) -> Optional[Decision]:
+        return CONTINUE
+
+    def take_promotions(self) -> Dict[str, float]:
+        return {}
+
+    def on_idle(self, views: Sequence) -> Dict[str, float]:
+        return {}
+
+    def predictions(self, views: Sequence) -> Dict[str, float]:
+        return {v.key: (v.metrics_vals[-1] if v.metrics_vals else 1e9)
+                for v in views}
+
+    def rank(self, views: Sequence) -> List[str]:
+        preds = self.predictions(views)
+        return [v.key for v in sorted(views, key=lambda v: preds[v.key])]
+
+
+class Searcher:
+    """Base searcher: suggests nothing.  Subclasses yield TrialSpecs."""
+
+    def suggest(self) -> Optional[TrialSpec]:
+        return None
+
+    def on_result(self, key: str, metric: Optional[float]) -> None:
+        """Feedback hook for adaptive searchers; default ignores it."""

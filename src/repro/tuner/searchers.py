@@ -1,0 +1,160 @@
+"""Searchers (what to try) and ASHA (when to stop it).
+
+  GridSearcher    the paper's exhaustive 2^4 grid, in ``hp_grid()`` order —
+                  byte-identical to the legacy pre-built trial list
+  RandomSearcher  uniform sample (without replacement) of grid points; trial
+                  indices stay grid indices so simulated ground truth is the
+                  same function of HP as under grid search
+  ListSearcher    wraps an explicit TrialSpec list (the legacy entry point)
+
+  ASHAScheduler   asynchronous successive halving on top of the transient
+                  engine.  Rungs are geometrically spaced step milestones
+                  (eta-fold apart); a trial crossing a rung continues only
+                  while it sits in the top 1/eta of that rung's results so
+                  far, otherwise it PAUSEs on its checkpoint.  Paused trials
+                  are promoted asynchronously the moment later results make
+                  them top-1/eta again, and swept once more at every engine
+                  idle; an idle with nothing promotable ends the run.
+
+                  Transient twist: a revocation already forced a checkpoint,
+                  so the scheduler treats it as a *free* rung boundary — a
+                  revoked trial below its rung's cutoff is parked instead of
+                  redeployed, spending zero extra checkpoint or deploy cost
+                  on a loser.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.trial import TrialSpec, Workload, make_trials
+from repro.tuner.events import MetricReported, TrialRevoked
+from repro.tuner.scheduler import (CONTINUE, PAUSE, Decision, Scheduler,
+                                   Searcher)
+
+
+class ListSearcher(Searcher):
+    """Suggests a pre-built TrialSpec list, in order."""
+
+    def __init__(self, trials: Sequence[TrialSpec]):
+        self._pending = list(trials)
+
+    def suggest(self) -> Optional[TrialSpec]:
+        return self._pending.pop(0) if self._pending else None
+
+
+class GridSearcher(ListSearcher):
+    """Exhaustive HP grid — current-paper behavior (2^4 per workload)."""
+
+    def __init__(self, workload: Workload):
+        super().__init__(make_trials(workload))
+
+
+class RandomSearcher(ListSearcher):
+    """Uniform sample of ``num_samples`` distinct grid points."""
+
+    def __init__(self, workload: Workload, num_samples: int, seed: int = 0):
+        grid = workload.hp_grid()
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(len(grid), size=min(num_samples, len(grid)),
+                         replace=False)
+        super().__init__(
+            [TrialSpec(workload, grid[int(i)], int(i)) for i in sorted(idx)])
+
+
+class ASHAScheduler(Scheduler):
+    """Asynchronous successive halving; revocations double as rung stops."""
+
+    def __init__(self, eta: int = 3, num_rungs: int = 3,
+                 min_steps: Optional[int] = None):
+        assert eta >= 2
+        self.eta = eta
+        self.num_rungs = num_rungs
+        self.min_steps = min_steps
+        self._workload_name: Optional[str] = None
+        self.rungs: List[int] = []            # ascending step milestones
+        self._rung_idx: Dict[str, int] = {}   # next rung each trial must clear
+        self._results: List[Dict[str, float]] = []
+        self._paused: Dict[str, int] = {}     # key -> rung it paused at
+        self._targets: Dict[str, float] = {}
+        self._promos: Dict[str, float] = {}
+
+    # ------------------------------------------------------------- set-up
+    def on_trial_added(self, spec: TrialSpec) -> float:
+        w = spec.workload
+        if self.rungs:
+            # rungs are derived from the first workload's step grid; a mixed
+            # pool would silently never pause the smaller-budget trials
+            assert w.name == self._workload_name, \
+                "ASHAScheduler supports one workload per run"
+        else:
+            self._workload_name = w.name
+            lo = self.min_steps or w.val_every
+            rungs = []
+            r = w.max_trial_steps
+            for _ in range(self.num_rungs):
+                r = r // self.eta
+                if r < lo:
+                    break
+                # snap to the metric grid so a value exists at the crossing
+                rungs.append(int(math.ceil(r / w.val_every) * w.val_every))
+            self.rungs = sorted(set(rungs))
+            self._results = [{} for _ in self.rungs]
+        self._rung_idx[spec.key] = 0
+        self._targets[spec.key] = w.max_trial_steps
+        return w.max_trial_steps
+
+    # ------------------------------------------------------------- helpers
+    def _in_top(self, rung: int, key: str) -> bool:
+        res = self._results[rung]
+        if key not in res:
+            return True
+        cutoff = max(1, len(res) // self.eta)
+        order = sorted(res, key=res.get)
+        return order.index(key) < cutoff
+
+    def _sweep_promotable(self) -> Dict[str, float]:
+        promos: Dict[str, float] = {}
+        for key in list(self._paused):
+            if self._in_top(self._paused[key], key):
+                del self._paused[key]
+                promos[key] = self._targets[key]
+        return promos
+
+    # ------------------------------------------------------------- events
+    def on_event(self, event, view) -> Decision:
+        if isinstance(event, MetricReported):
+            i = self._rung_idx.get(event.trial, 0)
+            if i < len(self.rungs) and event.step >= self.rungs[i]:
+                self._results[i][event.trial] = event.value
+                self._rung_idx[event.trial] = i + 1
+                # a new rung result can push parked survivors over the cutoff
+                self._promos.update(self._sweep_promotable())
+                if not self._in_top(i, event.trial):
+                    self._paused[event.trial] = i
+                    return PAUSE
+        elif isinstance(event, TrialRevoked):
+            # free rung boundary: the checkpoint exists anyway, so park the
+            # trial now if its last rung showing is below the cutoff
+            i = self._rung_idx.get(event.trial, 0) - 1
+            if i >= 0 and not self._in_top(i, event.trial):
+                self._paused[event.trial] = i
+                return PAUSE
+        return CONTINUE
+
+    def take_promotions(self) -> Dict[str, float]:
+        promos, self._promos = self._promos, {}
+        return promos
+
+    def on_idle(self, views: Sequence) -> Dict[str, float]:
+        return self._sweep_promotable()
+
+    # ------------------------------------------------------------- results
+    def rank(self, views: Sequence) -> List[str]:
+        preds = self.predictions(views)
+        # deeper rungs first, then metric — survivors outrank early losers
+        return [v.key for v in sorted(
+            views, key=lambda v: (-self._rung_idx.get(v.key, 0), preds[v.key]))]

@@ -1,0 +1,91 @@
+"""The paper's search policy, re-expressed as a pluggable Scheduler.
+
+SpotTune's Algorithm 1 policy, extracted from the old monolithic orchestrator
+loop and restated against the Scheduler protocol:
+
+  * every trial's initial budget is ``floor(theta * max_trial_steps)``;
+  * a trial whose metric plateaus (EarlyCurve's §III-C special case) is
+    STOPped early;
+  * when the engine drains (phase-1 idle), EarlyCurve extrapolates every
+    trial's final metric from its partial trajectory (seeded, so ranking is
+    reproducible), and the top-``mcnt`` predicted trials are promoted to the
+    full ``max_trial_steps`` budget — in predicted-rank order, which is also
+    the redeployment order (this preserves the legacy RNG-draw sequence);
+  * the second idle ends the run; the final ranking keeps the *phase-1*
+    predictions (the paper reports selection accuracy of the early
+    extrapolation, not of the finished winners).
+
+Driven through the engine this reproduces the legacy
+``build_spottune(...).run()`` RunResult exactly on the same seeds — the
+seed-equivalence test in ``tests/test_tuner.py`` pins that.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence
+
+from repro.core.earlycurve import EarlyCurve
+from repro.core.trial import TrialSpec
+from repro.tuner.events import MetricReported
+from repro.tuner.scheduler import CONTINUE, STOP, Decision, Scheduler
+
+
+class SpotTuneScheduler(Scheduler):
+    def __init__(self, theta: float = 0.7, mcnt: int = 3,
+                 earlycurve: Optional[EarlyCurve] = None, seed: int = 0):
+        self.theta = theta
+        self.mcnt = mcnt
+        self.ec = earlycurve or EarlyCurve()
+        self.seed = seed
+        self._stopped: set = set()
+        self._preds: Optional[Dict[str, float]] = None
+        self._phase = 1
+
+    # ------------------------------------------------------------- policy
+    def on_trial_added(self, spec: TrialSpec) -> float:
+        return math.floor(self.theta * spec.workload.max_trial_steps)
+
+    def on_event(self, event, view) -> Decision:
+        # convergence plateau (paper §III-C special case): metric histories
+        # are updated before events fire, so this sees exactly the trajectory
+        # the legacy loop checked once per advance
+        if isinstance(event, MetricReported) and view.key not in self._stopped:
+            if len(view.metrics_vals) >= self.ec.plateau_window \
+                    and self.ec.converged(view.metrics_vals):
+                self._stopped.add(view.key)
+                return STOP
+        return CONTINUE
+
+    def _predict_all(self, views: Sequence) -> Dict[str, float]:
+        preds: Dict[str, float] = {}
+        for v in views:
+            if self.theta >= 1.0 or v.key in self._stopped:
+                preds[v.key] = v.metrics_vals[-1] if v.metrics_vals else 1e9
+            else:
+                preds[v.key] = self.ec.predict_final(
+                    v.metrics_steps, v.metrics_vals,
+                    v.spec.workload.max_trial_steps, seed=self.seed)
+        return preds
+
+    def on_idle(self, views: Sequence) -> Dict[str, float]:
+        if self._phase == 1:
+            self._phase = 2
+            # phase 2 (Algorithm 1 l.48-53): predict finals, continue top-mcnt
+            self._preds = self._predict_all(views)
+            if self.theta >= 1.0:
+                return {}
+            order = sorted(views, key=lambda v: self._preds[v.key])
+            promotions: Dict[str, float] = {}
+            for v in order[: self.mcnt]:
+                max_steps = v.spec.workload.max_trial_steps
+                if v.key not in self._stopped and v.steps < max_steps:
+                    promotions[v.key] = max_steps
+            return promotions
+        return {}
+
+    # ------------------------------------------------------------- results
+    def predictions(self, views: Sequence) -> Dict[str, float]:
+        if self._preds is None:  # run never reached idle (out-of-engine use)
+            self._preds = self._predict_all(views)
+        return dict(self._preds)

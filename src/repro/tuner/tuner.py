@@ -1,0 +1,112 @@
+"""Tuner facade: engine + scheduler + searcher = one HPT run.
+
+    engine    = ExecutionEngine(market, backend, provisioner, EngineConfig())
+    tuner     = Tuner(engine, SpotTuneScheduler(theta=0.7, mcnt=3),
+                      GridSearcher(workload))
+    result    = tuner.run()          # -> RunResult
+
+The facade (1) drains the searcher into the engine (the scheduler picks each
+trial's initial step budget), (2) alternates ``engine.run_until_idle()`` with
+``scheduler.on_idle()`` promotion rounds until the scheduler has nothing left
+to resume, and (3) assembles the ``RunResult`` — cost/JCT/refund accounting
+from the engine, predicted ranking from the scheduler, ground truth from the
+backend.  The legacy ``repro.core.orchestrator`` API is a thin shim over this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.tuner.engine import ExecutionEngine
+from repro.tuner.scheduler import Scheduler, Searcher
+
+
+@dataclasses.dataclass
+class RunResult:
+    cost: float
+    refunded: float
+    jct: float
+    steps_total: float
+    free_steps: float
+    lost_steps: float
+    ckpt_seconds: float
+    restore_seconds: float
+    redeployments: int
+    predicted_rank: List[str]
+    true_rank: List[str]
+    top1_correct: bool
+    top3_contains_best: bool
+    pred_errors: Dict[str, float]
+    per_trial_steps: Dict[str, float]
+    events: List[tuple]
+
+    @property
+    def free_frac(self) -> float:
+        return self.free_steps / max(self.steps_total, 1.0)
+
+    @property
+    def ckpt_frac(self) -> float:
+        return (self.ckpt_seconds + self.restore_seconds) / max(self.jct, 1e-9)
+
+    def pcr(self, alpha: float = 1.0) -> float:
+        return alpha / max(self.jct * max(self.cost, 1e-9), 1e-12)
+
+
+class Tuner:
+    def __init__(self, engine: ExecutionEngine, scheduler: Scheduler,
+                 searcher: Searcher):
+        self.engine = engine
+        self.scheduler = scheduler
+        self.searcher = searcher
+        engine.bind(scheduler)
+        while True:
+            spec = searcher.suggest()
+            if spec is None:
+                break
+            target = scheduler.on_trial_added(spec)
+            if target is None:
+                target = spec.workload.max_trial_steps
+            engine.add_trial(spec, target)
+        if not engine.states:
+            raise ValueError("searcher suggested no trials")
+
+    def run(self) -> RunResult:
+        engine, scheduler = self.engine, self.scheduler
+        while True:
+            engine.run_until_idle()
+            promotions = scheduler.on_idle(engine.views())
+            if not promotions:
+                break
+            engine.resume(promotions)
+
+        views = engine.views()
+        preds = scheduler.predictions(views)
+        predicted_rank = scheduler.rank(views)
+        for v in views:
+            self.searcher.on_result(v.key, preds.get(v.key))
+
+        true_finals = {v.key: engine.backend.true_final(v.spec) for v in views}
+        true_rank = [k for k, _ in sorted(true_finals.items(), key=lambda kv: kv[1])]
+        pred_errors = {
+            k: abs(preds[k] - true_finals[k]) / max(abs(true_finals[k]), 1e-9)
+            for k in preds}
+
+        return RunResult(
+            cost=engine.market.billed,
+            refunded=engine.market.refunded,
+            jct=max([s.finish_time for s in views] + [engine.t]),
+            steps_total=sum(s.steps for s in views),
+            free_steps=sum(s.free_steps for s in views),
+            lost_steps=sum(s.lost_steps for s in views),
+            ckpt_seconds=sum(s.ckpt_seconds for s in views),
+            restore_seconds=sum(s.restore_seconds for s in views),
+            redeployments=sum(s.redeployments for s in views),
+            predicted_rank=predicted_rank,
+            true_rank=true_rank,
+            top1_correct=predicted_rank[0] == true_rank[0],
+            top3_contains_best=true_rank[0] in predicted_rank[:3],
+            pred_errors=pred_errors,
+            per_trial_steps={s.key: s.steps for s in views},
+            events=engine.events,
+        )

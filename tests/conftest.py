@@ -1,3 +1,14 @@
+import os
+
+# Give the host-CPU platform 8 fake devices for the sharding/mesh tests.
+# Must be set before the first jax import anywhere in the test session
+# (conftest is imported before any test module).  The old per-module
+# `jax.config.update("jax_num_cpu_devices", 8)` raises AttributeError on
+# this JAX version.
+_flag = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _flag).strip()
+
 import numpy as np
 import pytest
 

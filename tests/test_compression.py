@@ -4,17 +4,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.optim import adamw, sgd
 from repro.optim.compression import (compressed, compress_leaf,
                                      dequantize_int8, init_error,
                                      int8_allreduce, quantize_int8)
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.models.shard_compat import shard_map_unchecked
 
 
 def test_quantize_roundtrip_error_bound(rng):
@@ -86,9 +83,9 @@ def test_int8_allreduce_shard_map(rng):
 
     from jax.sharding import PartitionSpec as P
 
-    mean, new_err = shard_map(
+    mean, new_err = shard_map_unchecked(
         body, mesh=mesh,
-        in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False,
+        in_specs=(P(), P()), out_specs=(P(), P()),
     )(g, err)
     q, s = quantize_int8(g["w"])
     np.testing.assert_allclose(np.asarray(mean["w"]),

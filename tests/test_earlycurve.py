@@ -3,7 +3,7 @@ plateau handling — plus hypothesis property tests of the Eq. 6 invariants."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.earlycurve import (EarlyCurve, SLAQPredictor, detect_stages,
                                    fit_stage, predict_from_fit)

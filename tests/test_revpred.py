@@ -3,7 +3,7 @@ feature engineering, model training."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import market as mkt
 from repro.core.revpred import (HISTORY, N_FEAT, algorithm2_delta,

@@ -7,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-jax.config.update("jax_num_cpu_devices", 8) if hasattr(jax.config, "update") else None
+# 8 fake host devices come from XLA_FLAGS, set in conftest.py before any
+# jax import (jax.config.update("jax_num_cpu_devices", ...) is unavailable
+# on this JAX version).
 
 
 def _mesh_16x16_abstract():
@@ -16,7 +18,11 @@ def _mesh_16x16_abstract():
 
     try:
         return AbstractMesh((16, 16), ("data", "model"))
-    except TypeError:  # older signature
+    except TypeError:
+        pass
+    try:  # jax 0.4.3x signature: tuple of (name, size) pairs
+        return AbstractMesh((("data", 16), ("model", 16)))
+    except (TypeError, ValueError):  # oldest signature
         return AbstractMesh({"data": 16, "model": 16})
 
 

@@ -1,0 +1,178 @@
+"""Pluggable tuner API: seed-equivalence with the legacy orchestrator,
+searcher behavior, decision plumbing, and an end-to-end ASHA run."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.market import SpotMarket
+from repro.core.orchestrator import build_spottune
+from repro.core.provisioner import ZeroRevPred
+from repro.core.trial import WORKLOADS, SimTrialBackend, make_trials
+from repro.tuner import (ASHAScheduler, GridSearcher, ListSearcher,
+                         MetricReported, RandomSearcher, Scheduler,
+                         SpotTuneScheduler, Status, STOP, TrialFinished,
+                         TrialStarted, Tuner, build_engine)
+
+
+def _fresh_engine(seed_market=3, seed=0, revpred=None):
+    market = SpotMarket(days=12, seed=seed_market)
+    backend = SimTrialBackend(market.pool)
+    return build_engine(market, backend, revpred or ZeroRevPred(), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# seed equivalence: new API == legacy build_spottune, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+RESULT_FIELDS = ("cost", "refunded", "jct", "steps_total", "free_steps",
+                 "lost_steps", "ckpt_seconds", "restore_seconds",
+                 "redeployments", "predicted_rank", "true_rank",
+                 "top1_correct", "top3_contains_best", "pred_errors",
+                 "per_trial_steps")
+
+
+@pytest.mark.parametrize("theta", [0.7, 1.0])
+def test_tuner_reproduces_legacy_run_result(theta):
+    w = WORKLOADS[0]
+    m1 = SpotMarket(days=12, seed=3)
+    b1 = SimTrialBackend(m1.pool)
+    legacy = build_spottune(make_trials(w), m1, b1, ZeroRevPred(),
+                            theta=theta, mcnt=3, seed=0).run()
+
+    engine = _fresh_engine()
+    res = Tuner(engine, SpotTuneScheduler(theta=theta, mcnt=3),
+                GridSearcher(w)).run()
+
+    for field in RESULT_FIELDS:
+        assert getattr(res, field) == getattr(legacy, field), field
+    assert res.events == legacy.events
+
+
+# ---------------------------------------------------------------------------
+# searchers
+# ---------------------------------------------------------------------------
+
+
+def test_grid_searcher_matches_make_trials_order():
+    w = WORKLOADS[0]
+    s = GridSearcher(w)
+    suggested = []
+    while True:
+        spec = s.suggest()
+        if spec is None:
+            break
+        suggested.append(spec)
+    expected = make_trials(w)
+    assert [t.key for t in suggested] == [t.key for t in expected]
+    assert [t.hp for t in suggested] == [t.hp for t in expected]
+
+
+def test_random_searcher_samples_grid_without_replacement():
+    w = WORKLOADS[0]
+    s1 = RandomSearcher(w, num_samples=8, seed=7)
+    s2 = RandomSearcher(w, num_samples=8, seed=7)
+    grid = w.hp_grid()
+    keys = set()
+    while True:
+        a, b = s1.suggest(), s2.suggest()
+        assert (a is None) == (b is None)
+        if a is None:
+            break
+        assert a.key == b.key               # seeded => reproducible
+        assert grid[a.idx] == a.hp          # idx stays a grid index
+        keys.add(a.key)
+    assert len(keys) == 8                   # without replacement
+
+
+# ---------------------------------------------------------------------------
+# event stream + decisions
+# ---------------------------------------------------------------------------
+
+
+class _Recorder(Scheduler):
+    def __init__(self):
+        self.events = []
+
+    def on_event(self, event, view):
+        self.events.append(event)
+        return None
+
+
+def test_engine_emits_typed_lifecycle_events():
+    w = WORKLOADS[0]
+    engine = _fresh_engine()
+    rec = _Recorder()
+    Tuner(engine, rec, ListSearcher(make_trials(w)[:2])).run()
+    kinds = {type(e) for e in rec.events}
+    assert TrialStarted in kinds
+    assert MetricReported in kinds
+    assert TrialFinished in kinds
+    # events only ever refer to known trials, and metric events carry the
+    # already-appended point
+    keys = {s.key for s in engine.states}
+    assert all(e.trial in keys for e in rec.events)
+
+
+class _StopAt(Scheduler):
+    """STOP every trial at its first metric report."""
+
+    def on_event(self, event, view):
+        if isinstance(event, MetricReported):
+            assert view.metrics_vals, "history updated before event fires"
+            return STOP
+        return None
+
+
+def test_stop_decision_finishes_trial_early():
+    w = WORKLOADS[0]
+    engine = _fresh_engine()
+    res = Tuner(engine, _StopAt(), ListSearcher(make_trials(w)[:3])).run()
+    for st in engine.states:
+        assert st.status == Status.FINISHED
+        assert st.stopped
+        assert st.steps < w.max_trial_steps / 2
+    assert res.cost > 0
+
+
+# ---------------------------------------------------------------------------
+# ASHA end-to-end on the LoR workload (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_asha_random_end_to_end():
+    w = WORKLOADS[0]
+    engine = _fresh_engine()
+    res = Tuner(engine, ASHAScheduler(eta=2),
+                RandomSearcher(w, num_samples=8, seed=0)).run()
+    assert res.cost > 0
+    assert len(res.predicted_rank) == 8
+    assert set(res.predicted_rank) == {s.key for s in engine.states}
+    assert res.true_rank                          # ranked result exists
+    # successive halving actually halved: some trials were parked early,
+    # at least one survivor ran to the full budget
+    steps = sorted(res.per_trial_steps.values())
+    assert steps[0] < w.max_trial_steps
+    assert steps[-1] >= w.max_trial_steps - 1
+    # every allocation was returned to the market
+    assert all(a.released for a in engine.market.allocations)
+    # paused losers are cheaper than running the full grid policy
+    m2 = SpotMarket(days=12, seed=3)
+    b2 = SimTrialBackend(m2.pool)
+    full = build_spottune(make_trials(w), m2, b2, ZeroRevPred(),
+                          theta=1.0, mcnt=3, seed=0).run()
+    assert res.cost < full.cost
+
+
+def test_legacy_shim_exposes_states_and_config():
+    w = WORKLOADS[0]
+    m = SpotMarket(days=12, seed=3)
+    b = SimTrialBackend(m.pool)
+    orch = build_spottune(make_trials(w)[:2], m, b, ZeroRevPred(),
+                          theta=0.5, mcnt=1, seed=0)
+    assert len(orch.states) == 2            # populated before run()
+    assert orch.cfg.theta == 0.5
+    res = orch.run()
+    assert dataclasses.is_dataclass(res)
+    assert all(s.status == Status.FINISHED for s in orch.states)
