@@ -18,7 +18,7 @@ from repro.tuner import ASHAScheduler, GridSearcher, SpotTuneScheduler
 
 def run(workloads=None, seed: int = 0):
     rows = []
-    for w in (workloads or WORKLOADS[:2]):
+    for w in (workloads or WORKLOADS):
         results = {}
         for name, scheduler in (
                 ("spottune", SpotTuneScheduler(theta=0.7, mcnt=3, seed=seed)),

@@ -61,8 +61,7 @@ def _curve(alpha, k):
     return 1.0 / denom + a[3]
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
-def _fit_lm(k, y, alpha0, iters: int = 60):
+def _fit_lm_raw(k, y, alpha0, iters: int = 60):
     """Damped Gauss-Newton on MSE; returns best pre-params."""
 
     def residual(alpha):
@@ -97,6 +96,115 @@ def _fit_lm(k, y, alpha0, iters: int = 60):
     return best_a, best_c
 
 
+_fit_lm = functools.partial(jax.jit, static_argnames=("iters",))(_fit_lm_raw)
+# all restarts of one stage solved in a single dispatch (the sequential
+# per-restart dispatch + device sync dominated tuning-run post-processing)
+_fit_lm_batch = functools.partial(jax.jit, static_argnames=("iters",))(
+    jax.vmap(_fit_lm_raw, in_axes=(None, None, 0)))
+
+
+def _fit_lm_masked_raw(k, y, mask, n_real, alpha0):
+    """Same LM as ``_fit_lm_raw`` on a zero-padded stage: residuals are
+    masked, the cost divides by the real sample count — so fits of different
+    stage lengths batch into one dispatch."""
+
+    def residual(alpha):
+        return (_curve(alpha, k) - y) * mask
+
+    def cost(alpha):
+        r = residual(alpha)
+        return jnp.sum(r * r) / n_real
+
+    jac_fn = jax.jacfwd(residual)
+
+    def body(carry, _):
+        alpha, lam, best_a, best_c = carry
+        r = residual(alpha)
+        J = jac_fn(alpha)
+        JTJ = J.T @ J
+        g = J.T @ r
+        step = jnp.linalg.solve(JTJ + lam * jnp.eye(4), g)
+        cand = alpha - step
+        c_new, c_old = cost(cand), cost(alpha)
+        improved = c_new < c_old
+        alpha = jnp.where(improved, cand, alpha)
+        lam = jnp.where(improved, lam * 0.5, lam * 2.5)
+        lam = jnp.clip(lam, 1e-8, 1e8)
+        c_cur = jnp.where(improved, c_new, c_old)
+        best_a = jnp.where(c_cur < best_c, alpha, best_a)
+        best_c = jnp.minimum(c_cur, best_c)
+        return (alpha, lam, best_a, best_c), None
+
+    init = (alpha0, jnp.asarray(1e-2), alpha0, cost(alpha0))
+    (alpha, _, best_a, best_c), _ = jax.lax.scan(body, init, None, length=60)
+    return best_a, best_c
+
+
+# (stages, restarts) in one dispatch: outer vmap over padded stages, inner
+# over shared restart inits
+_fit_lm_masked_batch = jax.jit(jax.vmap(
+    jax.vmap(_fit_lm_masked_raw, in_axes=(None, None, None, None, 0)),
+    in_axes=(0, 0, 0, 0, None)))
+
+
+def _restart_inits(n_restarts: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    inits = [np.array([0.0, 0.5, 0.5, -2.0], np.float32)]
+    for _ in range(n_restarts - 1):
+        inits.append(rng.normal(0, 1.5, 4).astype(np.float32))
+    return np.stack(inits)
+
+
+def fit_stage_batch(stages: List[Tuple[np.ndarray, np.ndarray]],
+                    n_restarts: int = 4, seed: int = 0) -> List[dict]:
+    """Fit many stages at once; returns one ``fit_stage``-style dict each.
+
+    Stages are zero-padded to power-of-two buckets so one jitted solve covers
+    a whole bucket (and compiled shapes are reused across runs)."""
+    inits = jnp.asarray(_restart_inits(n_restarts, seed))
+    prepared = []
+    for ks, ys in stages:
+        ks = np.asarray(ks, np.float64)
+        ys = np.asarray(ys, np.float64)
+        k_scale = max(float(ks[-1]), 1.0)
+        y_off = float(np.min(ys))
+        y_scale = max(float(np.max(ys) - y_off), 1e-9)
+        prepared.append(((ks / k_scale).astype(np.float32),
+                         ((ys - y_off) / y_scale).astype(np.float32),
+                         k_scale, y_off, y_scale))
+    buckets: dict = {}
+    for i, p in enumerate(prepared):
+        L = len(p[0])
+        # 8/16 for short stages, then multiples of 32: few compiled shapes,
+        # little padding waste (the LM cost scales with the padded length)
+        b = 8 if L <= 8 else 16 if L <= 16 else ((L + 31) // 32) * 32
+        buckets.setdefault(b, []).append(i)
+    fits: List[Optional[dict]] = [None] * len(prepared)
+    for b, idxs in buckets.items():
+        kn = np.zeros((len(idxs), b), np.float32)
+        yn = np.zeros_like(kn)
+        mask = np.zeros_like(kn)
+        n_real = np.zeros(len(idxs), np.float32)
+        for row, i in enumerate(idxs):
+            L = len(prepared[i][0])
+            kn[row, :L] = prepared[i][0]
+            yn[row, :L] = prepared[i][1]
+            mask[row, :L] = 1.0
+            n_real[row] = L
+        a_all, c_all = _fit_lm_masked_batch(
+            jnp.asarray(kn), jnp.asarray(yn), jnp.asarray(mask),
+            jnp.asarray(n_real), inits)
+        a_all = np.asarray(a_all)
+        c_all = np.asarray(c_all)
+        for row, i in enumerate(idxs):
+            r = int(np.argmin(c_all[row]))
+            _, _, k_scale, y_off, y_scale = prepared[i]
+            fits[i] = {"alpha": a_all[row, r], "k_scale": k_scale,
+                       "y_off": y_off, "y_scale": y_scale,
+                       "rmse": float(np.sqrt(float(c_all[row, r])))}
+    return fits
+
+
 def fit_stage(ks: np.ndarray, ys: np.ndarray, n_restarts: int = 4,
               seed: int = 0):
     """Fit one stage.  Returns (pre-params, k_scale, y_off, y_scale, rmse)."""
@@ -109,22 +217,22 @@ def fit_stage(ks: np.ndarray, ys: np.ndarray, n_restarts: int = 4,
     yn = jnp.asarray((ys - y_off) / y_scale, jnp.float32)
 
     rng = np.random.default_rng(seed)
-    best = None
     inits = [np.array([0.0, 0.5, 0.5, -2.0], np.float32)]
     for _ in range(n_restarts - 1):
         inits.append(rng.normal(0, 1.5, 4).astype(np.float32))
-    for a0 in inits:
-        a, c = _fit_lm(kn, yn, jnp.asarray(a0))
-        c = float(c)
-        if best is None or c < best[1]:
-            best = (np.asarray(a), c)
-    return {"alpha": best[0], "k_scale": k_scale, "y_off": y_off,
-            "y_scale": y_scale, "rmse": float(np.sqrt(best[1]))}
+    a_all, c_all = _fit_lm_batch(kn, yn, jnp.asarray(np.stack(inits)))
+    c_all = np.asarray(c_all)
+    i = int(np.argmin(c_all))       # ties -> first, like the sequential scan
+    return {"alpha": np.asarray(a_all[i]), "k_scale": k_scale, "y_off": y_off,
+            "y_scale": y_scale, "rmse": float(np.sqrt(float(c_all[i])))}
 
 
 def predict_from_fit(fit: dict, k: float) -> float:
-    yn = float(_curve(jnp.asarray(fit["alpha"]), jnp.asarray(k / fit["k_scale"],
-                                                             jnp.float32)))
+    # plain-numpy mirror of _curve: a handful of scalar ops is not worth a
+    # round-trip through eager jax dispatch on the tuning-run idle path
+    a = np.logaddexp(np.asarray(fit["alpha"], np.float32), np.float32(0.0))
+    kn = np.float32(k / fit["k_scale"])
+    yn = float(1.0 / (a[0] * kn * kn + a[1] * kn + a[2] + 1e-9) + a[3])
     return yn * fit["y_scale"] + fit["y_off"]
 
 
@@ -149,19 +257,26 @@ class EarlyCurve:
         return detect_stages(vals, self.xi, self.eps, self.quiet)
 
     def converged(self, vals: Sequence[float]) -> bool:
-        """Plateau detection (paper §III-C special case)."""
-        v = np.asarray(vals, np.float64)
-        if len(v) < self.plateau_window:
-            return False
-        w = v[-self.plateau_window:]
-        rel = np.abs(np.diff(w)) / np.maximum(np.abs(w[:-1]), 1e-12)
-        return bool(np.max(rel) < self.plateau_tol)
+        """Plateau detection (paper §III-C special case).
 
-    def predict_final(self, steps: Sequence[int], vals: Sequence[float],
-                      target_step: int, seed: int = 0) -> float:
-        """Predict the metric at ``target_step`` from a partial trajectory."""
-        steps = np.asarray(steps)
-        vals = np.asarray(vals, np.float64)
+        Scalar early-exit form of ``max(|Δv|/|v|) < tol`` over the trailing
+        window — this runs on every metric event in the tuning hot loop, and
+        one above-tolerance step settles it."""
+        n = len(vals)
+        if n < self.plateau_window:
+            return False
+        tol = self.plateau_tol
+        prev = vals[n - self.plateau_window]
+        for i in range(n - self.plateau_window + 1, n):
+            cur = vals[i]
+            if abs(cur - prev) / max(abs(prev), 1e-12) >= tol:
+                return False
+            prev = cur
+        return True
+
+    def _final_stage(self, steps: np.ndarray, vals: np.ndarray):
+        """-> (l, r) of the fittable final stage, or None for the last-value
+        fallback (final stage too fresh even after merging its predecessor)."""
         segs = self.stages(vals)
         l, r = segs[-1]
         if r - l < self.min_points:
@@ -169,10 +284,46 @@ class EarlyCurve:
             if len(segs) >= 2:
                 l = segs[-2][0]
             if r - l < self.min_points:
-                return float(vals[-1])
+                return None
+        return l, r
+
+    def predict_final(self, steps: Sequence[int], vals: Sequence[float],
+                      target_step: int, seed: int = 0) -> float:
+        """Predict the metric at ``target_step`` from a partial trajectory."""
+        steps = np.asarray(steps)
+        vals = np.asarray(vals, np.float64)
+        seg = self._final_stage(steps, vals)
+        if seg is None:
+            return float(vals[-1])
+        l, r = seg
         ks = steps[l:r] - steps[l] + 1   # re-zero stage clock (Eq. 4 per-stage)
         fit = fit_stage(ks, vals[l:r], seed=seed)
         return predict_from_fit(fit, float(target_step - steps[l] + 1))
+
+    def predict_final_batch(self, trajs: Sequence[Tuple], seed: int = 0
+                            ) -> List[float]:
+        """``predict_final`` over many ``(steps, vals, target_step)`` partial
+        trajectories, with every curve fit batched into as few jitted solves
+        as the stage-length buckets allow (the per-trial dispatch dominated
+        a tuning run's idle phase)."""
+        out: List[float] = [0.0] * len(trajs)
+        jobs = []
+        for i, (steps, vals, target_step) in enumerate(trajs):
+            steps = np.asarray(steps)
+            vals = np.asarray(vals, np.float64)
+            seg = self._final_stage(steps, vals)
+            if seg is None:
+                out[i] = float(vals[-1])
+                continue
+            l, r = seg
+            jobs.append((i, steps[l:r] - steps[l] + 1, vals[l:r],
+                         float(target_step - steps[l] + 1)))
+        if jobs:
+            fits = fit_stage_batch([(ks, ys) for _, ks, ys, _ in jobs],
+                                   seed=seed)
+            for (i, _, _, k_pred), fit in zip(jobs, fits):
+                out[i] = predict_from_fit(fit, k_pred)
+        return out
 
 
 @dataclasses.dataclass

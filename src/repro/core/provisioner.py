@@ -57,6 +57,29 @@ class PerfModel:
             self._m[key] = secs_per_step
         self._observed[key] = True
 
+    def update_many(self, inst: InstanceType, trial: TrialSpec, obs) -> None:
+        """Fold a whole window of per-tick observations into M in one call.
+
+        Bit-exact replay of ``update`` called once per observation in order —
+        the event-driven engine uses this to catch up the EWMA over ticks it
+        skipped (the observations are deterministic, see
+        ``SimTrialBackend.noisy_step_times``)."""
+        vals = obs.tolist() if hasattr(obs, "tolist") else list(obs)
+        if not vals:
+            return
+        key = (inst.name, trial.key)
+        i = 0
+        if not (key in self._m and self._observed.get(key)):
+            self._m[key] = vals[0]
+            self._observed[key] = True
+            i = 1
+        a = self.ewma
+        b = 1 - a
+        m = self._m[key]
+        for o in vals[i:]:
+            m = b * m + a * o
+        self._m[key] = m
+
     def observed(self, inst: InstanceType, trial: TrialSpec) -> bool:
         return self._observed.get((inst.name, trial.key), False)
 
@@ -81,8 +104,12 @@ class Provisioner:
 
     def best_instance(self, t: float, trial: TrialSpec,
                       exclude: Optional[set] = None) -> Choice:
-        """Algorithm 1 getBestInst: argmin over the pool of Eq. 2."""
-        best: Optional[Choice] = None
+        """Algorithm 1 getBestInst: argmin over the pool of Eq. 2.
+
+        The bid draws keep the legacy per-candidate RNG order (excluded
+        markets consume no draw); the RevPred forward is batched over the
+        whole pool in one dispatch when the predictor supports it."""
+        cands = []
         for inst in self.market.pool:
             if exclude and inst.name in exclude:
                 continue
@@ -91,8 +118,17 @@ class Provisioner:
             max_price = self.market.price(inst, t) + float(
                 self.rng.uniform(self.delta_lo, self.delta_hi)) * (
                 inst.od_price / 0.33)
-            p = float(self.revpred.predict(inst, t, max_price))
-            p = min(max(p, 0.0), 1.0)
+            cands.append((inst, max_price))
+        assert cands, "empty pool"
+        predict_pool = getattr(self.revpred, "predict_pool", None)
+        if predict_pool is not None:
+            ps = predict_pool([inst for inst, _ in cands], t,
+                              [mp for _, mp in cands])
+        else:
+            ps = [self.revpred.predict(inst, t, mp) for inst, mp in cands]
+        best: Optional[Choice] = None
+        for (inst, max_price), p in zip(cands, ps):
+            p = min(max(float(p), 0.0), 1.0)
             m = self.perf.get(inst, trial)
             avg = self.market.avg_price(inst, t)
             s_cost = m * (1.0 - p) * avg / HOUR
@@ -102,7 +138,6 @@ class Provisioner:
             key = (s_cost, m * avg)
             if best is None or key < best_key:
                 best, best_key = Choice(inst, max_price, p, s_cost), key
-        assert best is not None, "empty pool"
         return best
 
 

@@ -86,9 +86,10 @@ class TrialSpec:
     hp: dict
     idx: int
 
-    @property
-    def key(self) -> str:
-        return f"{self.workload.name}/hp{self.idx:02d}"
+    def __post_init__(self):
+        # cached: the key is read on every perf-matrix/curve lookup in the
+        # simulation hot loop (specs are never re-pointed after construction)
+        self.key = f"{self.workload.name}/hp{self.idx:02d}"
 
 
 def make_trials(workload: Workload) -> List[TrialSpec]:
@@ -108,6 +109,44 @@ def _hp_unit(rng_seed: int, name: str, val) -> float:
     return float(h.uniform(0, 1))
 
 
+# Per-tick step-time jitter is a pure function of (workload.seed, int(t)) —
+# process-wide cache, shared across backends / market replicas / engine runs.
+_JITTER_CACHE: Dict[tuple, np.ndarray] = {}
+_JITTER_CHUNK = 4096   # ticks synthesized per cache fill
+
+
+def _jitter_ticks(w_seed: int, tick_s: float, k1: int) -> np.ndarray:
+    """Dense array of per-tick jitters covering grid ticks 0..>=k1.
+
+    Entry k is the exact draw ``SimTrialBackend.step_time`` makes at
+    ``noisy_t = k * tick_s`` — the same ``SeedSequence([w_seed, int(t)])``
+    stream, batch-filled so the event-driven fast path reads a slice instead
+    of building one numpy Generator per skipped tick."""
+    key = (w_seed, tick_s)
+    arr = _JITTER_CACHE.get(key)
+    have = 0 if arr is None else len(arr)
+    if k1 >= have:
+        need = ((k1 + 1 + _JITTER_CHUNK - 1) // _JITTER_CHUNK) * _JITTER_CHUNK
+        ext = np.empty(need - have, np.float64)
+        ss, rng = np.random.SeedSequence, np.random.default_rng
+        for i in range(len(ext)):
+            ext[i] = rng(ss([w_seed, int((have + i) * tick_s)])).normal(1.0, 0.02)
+        arr = ext if arr is None else np.concatenate([arr, ext])
+        _JITTER_CACHE[key] = arr
+    return arr
+
+
+# base step times and loss curves are pure functions of (workload, hp, idx,
+# instance, ref_chips) — benchmark suites re-create a fresh backend per market
+# replica, so cold per-instance caches were re-deriving them every run
+_BASE_CACHE: Dict[tuple, float] = {}
+_CURVE_CACHE: Dict[tuple, tuple] = {}
+
+
+def _spec_key(trial: TrialSpec) -> tuple:
+    return (trial.workload, tuple(sorted(trial.hp.items())), trial.idx)
+
+
 class SimTrialBackend:
     """Ground truth for the simulation: step times, loss curves, model size."""
 
@@ -115,6 +154,8 @@ class SimTrialBackend:
         self.pool = pool
         self.ref_chips = ref_chips
         self._curve_cache: Dict[str, np.ndarray] = {}
+        self._curve_list_cache: Dict[str, list] = {}
+        self._base_cache: Dict[tuple, float] = {}
 
     # ----------------------------------------------------------- step times
     def step_time(self, trial: TrialSpec, inst: InstanceType,
@@ -142,6 +183,40 @@ class SimTrialBackend:
             return base * max(j, 0.5)
         return base
 
+    # ---- cached/batched variants used by the event-driven fast path.
+    # They return bit-identical values to ``step_time``: the base is the same
+    # deterministic product, and the jitter is drawn from the same
+    # ``SeedSequence([workload.seed, int(t)])`` stream — only memoized so that
+    # replaying thousands of skipped ticks does not re-instantiate a fresh
+    # numpy Generator per tick (which dominates the exact-tick loop's cost).
+
+    def base_step_time(self, trial: TrialSpec, inst: InstanceType) -> float:
+        key = (trial.key, inst.name)
+        v = self._base_cache.get(key)
+        if v is None:
+            # chips is a step_time input (speedup exponent, memory penalty)
+            # and is not implied by the name for custom pools
+            gkey = _spec_key(trial) + (inst.name, inst.chips, self.ref_chips)
+            v = _BASE_CACHE.get(gkey)
+            if v is None:
+                v = _BASE_CACHE[gkey] = float(self.step_time(trial, inst))
+            self._base_cache[key] = v
+        return v
+
+    def noisy_step_times(self, trial: TrialSpec, inst: InstanceType,
+                         k0: int, k1: int, tick_s: float, base: float = None):
+        """``step_time(trial, inst, noisy_t=k*tick_s)`` for grid ticks
+        ``k0..k1`` inclusive — bit-identical to the per-tick calls.  Returns
+        a float sequence: a scalar loop below the numpy-overhead break-even
+        window, a vectorized array above it.  ``base`` short-circuits the
+        base-step-time lookup when the caller already holds it."""
+        if base is None:
+            base = self.base_step_time(trial, inst)
+        jit = _jitter_ticks(trial.workload.seed, tick_s, k1)
+        if k1 - k0 < 8:
+            return [base * max(j, 0.5) for j in jit[k0:k1 + 1]]
+        return base * np.maximum(jit[k0:k1 + 1], 0.5)
+
     # ------------------------------------------------------------- quality
     def final_loss(self, trial: TrialSpec) -> float:
         """Deterministic HP-dependent asymptote (the trial's true quality)."""
@@ -167,6 +242,13 @@ class SimTrialBackend:
         """Validation-loss value at every val_every step grid point."""
         if trial.key in self._curve_cache:
             return self._curve_cache[trial.key]
+        gkey = _spec_key(trial)
+        cached = _CURVE_CACHE.get(gkey)
+        if cached is not None:
+            arr, lst = cached
+            self._curve_cache[trial.key] = arr
+            self._curve_list_cache[trial.key] = lst
+            return arr
         w = trial.workload
         grid = np.arange(w.val_every, w.max_trial_steps + 1, w.val_every)
         L_inf = self.final_loss(trial)
@@ -199,15 +281,22 @@ class SimTrialBackend:
                     # post-drop starting point (zeta ~ 0.55 > xi=0.5)
         noise = rng.normal(0, 0.0015, size=len(grid)) * vals
         vals = np.maximum(vals + noise, 0.01)
+        lst = vals.tolist()       # python floats for the metric hot path
+        _CURVE_CACHE[gkey] = (vals, lst)
         self._curve_cache[trial.key] = vals
+        self._curve_list_cache[trial.key] = lst
         return vals
 
     def metric_at(self, trial: TrialSpec, step: int) -> Optional[float]:
         w = trial.workload
         if step < w.val_every:
             return None
-        grid_idx = min(step // w.val_every, len(self.curve(trial))) - 1
-        return float(self.curve(trial)[grid_idx])
+        lst = self._curve_list_cache.get(trial.key)
+        if lst is None:
+            self.curve(trial)
+            lst = self._curve_list_cache[trial.key]
+        grid_idx = min(step // w.val_every, len(lst)) - 1
+        return lst[grid_idx]
 
     def true_final(self, trial: TrialSpec) -> float:
         return float(self.curve(trial)[-1])

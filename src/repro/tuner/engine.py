@@ -22,13 +22,29 @@ included).  ``PAUSE`` parks a trial on its checkpoint without redeploying it;
 
 The tick discipline (one pass per ``tick_s`` of simulated time, trials
 processed in activation order, waiting trials deployed at tick end) is kept
-verbatim from the paper's Algorithm 1 SLEEP loop.
+verbatim from the paper's Algorithm 1 SLEEP loop — but by default the engine
+does not *step* every tick.  Between two consecutive lifecycle boundaries
+(deployment becoming ready, revocation notice, the revocation itself, the
+1-hour rotation, the next ``val_every`` metric crossing, reaching the target
+step count, the horizon guard) a running trial's per-tick work is closed-form:
+steps grow linearly in simulated time and the per-tick EWMA perf-matrix
+updates consume noise draws that are deterministic in ``(workload.seed,
+int(t))``.  The event-driven fast path therefore jumps simulated time straight
+to the earliest boundary (snapped to the tick grid) and replays the skipped
+ticks as one vectorized fold (``_advance_window``), which is exactly
+equivalent to ticking through them.  ``EngineConfig(exact_ticks=True)`` keeps
+the legacy tick-for-tick loop; ``repro.tuner.equivalence`` pins fast == exact
+(billing, finish times, metric histories) across seeds.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
+import heapq
+import itertools
+import math
+import os
 from typing import Dict, List, Optional
 
 from repro.core.market import HOUR, Allocation, SpotMarket
@@ -70,6 +86,9 @@ class TrialState:
     exclude: set = dataclasses.field(default_factory=set)
     finish_time: float = 0.0
     _next_val: int = 0
+    _last_t: float = 0.0             # last tick replayed (fast path only)
+    _next_k: int = 0                 # next boundary tick index (fast path)
+    _spt: float = 0.0                # cached noise-free secs/step (fast path)
 
     @property
     def key(self) -> str:
@@ -81,6 +100,12 @@ class TrialState:
         return self.stopped
 
 
+def _exact_ticks_default() -> bool:
+    """REPRO_EXACT_TICKS=1 forces the legacy tick loop process-wide — the
+    lever benchmarks/run.py --exact uses to measure the fast-path speedup."""
+    return os.environ.get("REPRO_EXACT_TICKS", "0") not in ("", "0")
+
+
 @dataclasses.dataclass
 class EngineConfig:
     tick_s: float = 10.0
@@ -90,6 +115,9 @@ class EngineConfig:
     straggler_factor: float = 0.0      # 0 = off (paper); >1 enables mitigation
     max_sim_s: float = 10 * 24 * 3600.0
     seed: int = 0
+    # False (default): event-driven boundary jumping; True: the legacy
+    # tick-for-tick Algorithm 1 loop (the two are equivalence-pinned)
+    exact_ticks: bool = dataclasses.field(default_factory=_exact_ticks_default)
 
 
 def build_engine(market: SpotMarket, backend: SimTrialBackend, revpred,
@@ -112,15 +140,25 @@ class ExecutionEngine:
         self.prov = provisioner
         self.cfg = config or EngineConfig()
         self.scheduler: Scheduler = Scheduler()
+        self._drain_promos = False
         self.states: List[TrialState] = []
         self._by_key: Dict[str, TrialState] = {}
         self._active: List[TrialState] = []
         self.events: List[tuple] = []
         self.t = 0.0
+        # fast path: min-heap of (tick index, seq, trial) boundary entries
+        # with lazy invalidation (stale when trial._next_k moved on)
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self._pending_deploy = False
 
     # ------------------------------------------------------------- trials
     def bind(self, scheduler: Scheduler) -> None:
         self.scheduler = scheduler
+        # schedulers that never promote asynchronously (the base no-op is
+        # not overridden) skip the per-event promotion drain entirely
+        self._drain_promos = (type(scheduler).take_promotions
+                              is not Scheduler.take_promotions)
 
     def add_trial(self, spec: TrialSpec, target_steps: float) -> TrialState:
         assert spec.key not in self._by_key, f"duplicate trial key {spec.key}"
@@ -174,6 +212,9 @@ class ExecutionEngine:
         st.alloc_start_steps = st.steps
         st.status = Status.RUNNING
         st.redeployments += 1
+        st._last_t = self.t
+        st._next_k = 0        # fresh allocation -> boundaries recomputed
+        st._spt = self.backend.base_step_time(st.spec, alloc.inst)
         self.events.append((self.t, "deploy", st.spec.key, choice.inst.name,
                             round(choice.max_price, 4), round(choice.p_revoke, 3)))
         self._dispatch(TrialStarted(self.t, st.key, choice.inst.name,
@@ -202,6 +243,36 @@ class ExecutionEngine:
                 new_points.append((step, val))
         return new_points
 
+    def _advance_window(self, st: TrialState) -> List[tuple]:
+        """Fast-path advance: replay every skipped tick in ``(st._last_t,
+        self.t]`` at once — one fused steps update, one vectorized EWMA fold
+        over the deterministic noise draws, the same metric-crossing scan."""
+        tick_s = self.cfg.tick_s
+        t = self.t
+        start = st.ready_at if st.ready_at > st._last_t else st._last_t
+        st._last_t = t
+        k0 = math.floor(start / tick_s) + 1       # first tick with dt > 0
+        k1 = round(t / tick_s)
+        if k1 < k0:
+            return []                             # still inside deploy/restore
+        inst = st.alloc.inst
+        st.steps = min(st.steps + (t - start) / st._spt, st.target_steps)
+        obs = self.backend.noisy_step_times(st.spec, inst, k0, k1, tick_s,
+                                            base=st._spt)
+        self.prov.perf.update_many(inst, st.spec, obs)
+        # metric points crossed (identical to the per-tick scan)
+        w = st.spec.workload
+        new_points = []
+        while (st._next_val + 1) * w.val_every <= st.steps:
+            st._next_val += 1
+            step = st._next_val * w.val_every
+            val = self.backend.metric_at(st.spec, step)
+            if val is not None:
+                st.metrics_steps.append(step)
+                st.metrics_vals.append(val)
+                new_points.append((step, val))
+        return new_points
+
     # ------------------------------------------------------------ decisions
     def _dispatch(self, event, st: TrialState) -> Decision:
         d = self.scheduler.on_event(event, st) or CONTINUE
@@ -211,15 +282,18 @@ class ExecutionEngine:
             st.pause_requested = True
         elif d.kind == DecisionKind.PROMOTE:
             st.target_steps = d.target_steps
-        promos = self.scheduler.take_promotions()
-        if promos:
-            for key, target in promos.items():
-                self._promote(key, target)
+        if self._drain_promos:
+            promos = self.scheduler.take_promotions()
+            if promos:
+                for key, target in promos.items():
+                    self._promote(key, target)
         return d
 
     def _promote(self, key: str, target: float):
         st = self._by_key[key]
         st.target_steps = target
+        st._next_k = 0        # budget changed -> boundaries recomputed
+        self._pending_deploy = True   # wake the fast path at the next tick
         if st.status in (Status.PAUSED, Status.FINISHED):
             st.status = Status.WAITING
         if st not in self._active:
@@ -234,9 +308,14 @@ class ExecutionEngine:
 
     # ----------------------------------------------------------- main loop
     def run_until_idle(self):
-        """Tick until no trial is running or waiting (paused trials park;
-        promotions delivered mid-run re-activate them)."""
+        """Run until no trial is running or waiting (paused trials park;
+        promotions delivered mid-run re-activate them).
+
+        ``exact_ticks=True`` visits every ``tick_s`` of simulated time (the
+        legacy Algorithm 1 SLEEP loop); the default fast path processes the
+        same ticks a boundary falls on and jumps over the rest."""
         cfg = self.cfg
+        exact = cfg.exact_ticks
         while True:
             runnable = [s for s in self._active
                         if s.status in (Status.RUNNING, Status.WAITING)]
@@ -244,81 +323,170 @@ class ExecutionEngine:
                 return
             if self.t > cfg.max_sim_s or self.t >= self.market.horizon_s() - HOUR:
                 raise RuntimeError("simulation horizon exhausted")
-            for st in runnable:
-                if st.status != Status.RUNNING:
-                    continue
+            touched = self._tick(runnable, exact)
+            self.t = self.t + cfg.tick_s if exact else self._next_tick(touched)
+
+    def _tick(self, runnable: List[TrialState], exact: bool) -> List[TrialState]:
+        """One Algorithm-1 pass at ``self.t``: advance every running trial,
+        apply the notice/revoke/finish/pause/rotate/straggler chain, deploy
+        waiting trials at tick end.  Kept verbatim from the paper's loop —
+        the two advance flavors are equivalence-pinned.  Returns the trials
+        whose boundaries moved (advanced or redeployed) for rescheduling."""
+        cfg = self.cfg
+        k_now = round(self.t / cfg.tick_s)
+        touched: List[TrialState] = []
+        for st in runnable:
+            if st.status != Status.RUNNING:
+                continue
+            if exact:
                 run_from = max(st.ready_at, self.t - cfg.tick_s)
                 dt = self.t - run_from
-                if dt > 0:
-                    for step, val in self._advance(st, dt):
-                        self._dispatch(MetricReported(self.t, st.key, step, val), st)
+                new_points = self._advance(st, dt) if dt > 0 else []
+            else:
+                # a running trial only needs attention at its own boundaries:
+                # nothing in its condition chain can fire before st._next_k,
+                # and its skipped ticks replay exactly whenever it next folds
+                if st._next_k > k_now:
+                    continue
+                touched.append(st)
+                new_points = self._advance_window(st)
+            for step, val in new_points:
+                self._dispatch(MetricReported(self.t, st.key, step, val), st)
 
-                a = st.alloc
-                # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26)
-                if a.t_revoke is not None and not st.notice_handled \
-                        and self.t >= a.t_revoke - cfg.notice_s:
-                    self._checkpoint(st)
-                    st.notice_handled = True
-                    self.events.append((self.t, "notice", st.spec.key))
-                    self._dispatch(RevocationNotice(self.t, st.key, a.t_revoke), st)
-                # revocation fires
-                if a.t_revoke is not None and self.t >= a.t_revoke:
-                    lost = st.steps - st.ckpt_steps
-                    st.lost_steps += lost
-                    st.steps = st.ckpt_steps      # roll back to checkpoint
-                    st._next_val = int(st.steps // st.spec.workload.val_every)
-                    n = int(st._next_val)
-                    st.metrics_steps = st.metrics_steps[:n]
-                    st.metrics_vals = st.metrics_vals[:n]
-                    self._release(st, revoked=True)
-                    st.status = Status.WAITING
-                    d = self._dispatch(
-                        TrialRevoked(self.t, st.key, lost, st.ckpt_steps), st)
-                    if d.kind == DecisionKind.PAUSE or st.pause_requested:
-                        self._park(st)  # free rung boundary (ASHA)
-                    continue
-                # (2) finished: target reached or a STOP decision (l.27-30)
-                if st.steps >= st.target_steps or st.stopped:
-                    st.pause_requested = False
-                    self._checkpoint(st)
-                    self._release(st, revoked=False)
-                    st.status = Status.FINISHED
-                    st.finish_time = self.t + self._ckpt_time(st)
-                    self.events.append((self.t, "finish", st.spec.key, st.steps))
-                    self._dispatch(
-                        TrialFinished(self.t, st.key, st.steps, st.stopped), st)
-                    continue
-                # scheduler-requested pause (rung boundary et al.)
-                if st.pause_requested:
-                    self._checkpoint(st)
-                    self._release(st, revoked=False)
+            a = st.alloc
+            # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26)
+            if a.t_revoke is not None and not st.notice_handled \
+                    and self.t >= a.t_revoke - cfg.notice_s:
+                self._checkpoint(st)
+                st.notice_handled = True
+                self.events.append((self.t, "notice", st.spec.key))
+                self._dispatch(RevocationNotice(self.t, st.key, a.t_revoke), st)
+            # revocation fires
+            if a.t_revoke is not None and self.t >= a.t_revoke:
+                lost = st.steps - st.ckpt_steps
+                st.lost_steps += lost
+                st.steps = st.ckpt_steps      # roll back to checkpoint
+                st._next_val = int(st.steps // st.spec.workload.val_every)
+                n = int(st._next_val)
+                st.metrics_steps = st.metrics_steps[:n]
+                st.metrics_vals = st.metrics_vals[:n]
+                self._release(st, revoked=True)
+                st.status = Status.WAITING
+                d = self._dispatch(
+                    TrialRevoked(self.t, st.key, lost, st.ckpt_steps), st)
+                if d.kind == DecisionKind.PAUSE or st.pause_requested:
+                    self._park(st)  # free rung boundary (ASHA)
+                continue
+            # (2) finished: target reached or a STOP decision (l.27-30)
+            if st.steps >= st.target_steps or st.stopped:
+                st.pause_requested = False
+                self._checkpoint(st)
+                self._release(st, revoked=False)
+                st.status = Status.FINISHED
+                st.finish_time = self.t + self._ckpt_time(st)
+                self.events.append((self.t, "finish", st.spec.key, st.steps))
+                self._dispatch(
+                    TrialFinished(self.t, st.key, st.steps, st.stopped), st)
+                continue
+            # scheduler-requested pause (rung boundary et al.)
+            if st.pause_requested:
+                self._checkpoint(st)
+                self._release(st, revoked=False)
+                self._park(st)
+                continue
+            # (3) one-hour proactive rotation (l.31-34)
+            if self.t - a.t_start >= HOUR:
+                self._checkpoint(st)
+                held = self.t - a.t_start
+                self._release(st, revoked=False)
+                st.status = Status.WAITING
+                self.events.append((self.t, "rotate", st.spec.key))
+                d = self._dispatch(HourRotation(self.t, st.key, held), st)
+                if d.kind == DecisionKind.PAUSE or st.pause_requested:
                     self._park(st)
-                    continue
-                # (3) one-hour proactive rotation (l.31-34)
-                if self.t - a.t_start >= HOUR:
+                continue
+            # beyond-paper: straggler re-placement
+            if cfg.straggler_factor > 1.0 and self.t >= st.ready_at + 60:
+                best_pred = min(self.prov.perf.get(i, st.spec)
+                                for i in self.market.pool)
+                obs = self.backend.step_time(st.spec, a.inst)
+                if obs > cfg.straggler_factor * best_pred:
                     self._checkpoint(st)
-                    held = self.t - a.t_start
+                    st.exclude = {a.inst.name}
                     self._release(st, revoked=False)
                     st.status = Status.WAITING
-                    self.events.append((self.t, "rotate", st.spec.key))
-                    d = self._dispatch(HourRotation(self.t, st.key, held), st)
-                    if d.kind == DecisionKind.PAUSE or st.pause_requested:
-                        self._park(st)
+                    self.events.append((self.t, "straggler", st.spec.key))
                     continue
-                # beyond-paper: straggler re-placement
-                if cfg.straggler_factor > 1.0 and self.t >= st.ready_at + 60:
-                    best_pred = min(self.prov.perf.get(i, st.spec)
-                                    for i in self.market.pool)
-                    obs = self.backend.step_time(st.spec, a.inst)
-                    if obs > cfg.straggler_factor * best_pred:
-                        self._checkpoint(st)
-                        st.exclude = {a.inst.name}
-                        self._release(st, revoked=False)
-                        st.status = Status.WAITING
-                        self.events.append((self.t, "straggler", st.spec.key))
-                        continue
 
-            for st in runnable:
-                if st.status == Status.WAITING:
-                    self._deploy(st)
-            self.t += cfg.tick_s
+        for st in runnable:
+            if st.status == Status.WAITING:
+                self._deploy(st)
+                touched.append(st)
+        return touched
+
+    def _next_tick(self, touched: List[TrialState]) -> float:
+        """Earliest grid tick > ``self.t`` at which anything can happen.
+
+        Per running trial the candidate boundaries are: the revocation notice,
+        the revocation itself, the 1-hour rotation, the next ``val_every``
+        metric crossing, and reaching ``target_steps`` (compute progresses at
+        the deterministic noise-free step time measured from the trial's last
+        replayed tick, so both step boundaries are closed-form).  Boundaries
+        are recomputed only for trials this tick touched and kept in a lazily
+        invalidated min-heap, so a jump costs O(touched) instead of
+        O(active).  Trials promoted mid-tick deploy at the next tick, like
+        the legacy loop; straggler mitigation compares the live perf matrix
+        every tick, so it forces single-tick stepping.  The jump never
+        overshoots the horizon guards the main loop raises on."""
+        cfg = self.cfg
+        tick_s = cfg.tick_s
+        k_now = round(self.t / tick_s)
+        if cfg.straggler_factor > 1.0:
+            return (k_now + 1) * tick_s
+        heap = self._heap
+        for st in touched:
+            if st.status != Status.RUNNING:
+                continue
+            a = st.alloc
+            cand = a.t_start + HOUR                       # 1-hour rotation
+            if a.t_revoke is not None:
+                b = a.t_revoke if st.notice_handled \
+                    else a.t_revoke - cfg.notice_s
+                if b < cand:
+                    cand = b
+            spt = st._spt
+            start = st.ready_at if st.ready_at > st._last_t else st._last_t
+            b = start + (st.target_steps - st.steps) * spt    # finish
+            if b < cand:
+                cand = b
+            w = st.spec.workload
+            nstep = (st._next_val + 1) * w.val_every
+            if nstep <= st.target_steps:                  # next metric point
+                b = start + (nstep - st.steps) * spt
+                if b < cand:
+                    cand = b
+            # snap up to the grid; the 1e-7 slack only ever lands us one tick
+            # early, where the (unchanged) condition chain simply re-arms
+            k = math.ceil(cand / tick_s - 1e-7)
+            if k <= k_now:
+                k = k_now + 1
+            st._next_k = k
+            heapq.heappush(heap, (k, next(self._seq), st))
+        if self._pending_deploy:
+            # a trial turned WAITING mid-tick (async promotion): deploy next
+            # tick, exactly like the legacy loop
+            self._pending_deploy = False
+            return (k_now + 1) * tick_s
+        while heap:
+            k, _, st = heap[0]
+            if k > k_now and st._next_k == k and st.status == Status.RUNNING:
+                break
+            heapq.heappop(heap)      # stale: rescheduled, parked, or done
+        if not heap:
+            return (k_now + 1) * tick_s
+        k = heap[0][0]
+        k_guard = min(math.floor(cfg.max_sim_s / tick_s) + 1,
+                      math.ceil((self.market.horizon_s() - HOUR) / tick_s))
+        if k > k_guard:
+            k = k_guard if k_guard > k_now else k_now + 1
+        return k * tick_s

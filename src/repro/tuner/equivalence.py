@@ -1,0 +1,128 @@
+"""Fast/exact equivalence harness for the execution engine.
+
+The event-driven fast path (``EngineConfig(exact_ticks=False)``, the default)
+claims to be *equivalent* to the legacy tick-for-tick loop: every externally
+observable outcome — dollars billed and refunded, per-allocation billing
+records, trial finish times, full per-trial metric histories, the event log —
+must match.  Step counters (``steps``, ``lost_steps``, ``free_steps``) are
+accumulated tick-by-tick on the exact path but as one fused sum per window on
+the fast path, so they may differ by float-rounding dust; they are compared
+to a tight relative tolerance instead of bit-for-bit.
+
+``compare_runs`` runs the same tuning problem through both paths on fresh
+market replicas and returns a report of any differences (empty == equivalent).
+``tests/test_simcore_equiv.py`` pins this across seeds; ``benchmarks/run.py
+--json`` re-checks it while measuring the speedup.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Optional
+
+from repro.core.market import SpotMarket
+from repro.core.provisioner import ZeroRevPred
+from repro.core.trial import SimTrialBackend, Workload, make_trials
+from repro.tuner.engine import EngineConfig, ExecutionEngine, build_engine
+from repro.tuner.searchers import ListSearcher
+from repro.tuner.spottune import SpotTuneScheduler
+from repro.tuner.tuner import RunResult, Tuner
+
+STEP_RTOL = 1e-9
+
+
+def _close(a: float, b: float, rtol: float = STEP_RTOL) -> bool:
+    return math.isclose(a, b, rel_tol=rtol, abs_tol=1e-9)
+
+
+def _diff_events(fast: List[tuple], exact: List[tuple], out: List[str]) -> None:
+    if len(fast) != len(exact):
+        out.append(f"event count: fast={len(fast)} exact={len(exact)}")
+        return
+    for i, (ef, ee) in enumerate(zip(fast, exact)):
+        if len(ef) != len(ee) or ef[:3] != ee[:3]:
+            out.append(f"event[{i}]: fast={ef} exact={ee}")
+            continue
+        for f, e in zip(ef[3:], ee[3:]):
+            if isinstance(f, dict):           # release billing record
+                for key in ("inst", "held_s", "revoked", "cost", "refund"):
+                    if f[key] != e[key]:
+                        out.append(f"event[{i}] release {key}: "
+                                   f"fast={f[key]} exact={e[key]}")
+            elif isinstance(f, float):
+                if not _close(f, e):
+                    out.append(f"event[{i}] payload: fast={ef} exact={ee}")
+            elif f != e:
+                out.append(f"event[{i}] payload: fast={ef} exact={ee}")
+
+
+def compare_engines(fast: ExecutionEngine, exact: ExecutionEngine,
+                    fast_res: RunResult, exact_res: RunResult) -> List[str]:
+    """Diff two finished runs; returns human-readable mismatch lines."""
+    out: List[str] = []
+    if fast.market.billed != exact.market.billed:
+        out.append(f"billed: fast={fast.market.billed!r} "
+                   f"exact={exact.market.billed!r}")
+    if fast.market.refunded != exact.market.refunded:
+        out.append(f"refunded: fast={fast.market.refunded!r} "
+                   f"exact={exact.market.refunded!r}")
+    if fast.t != exact.t:
+        out.append(f"engine.t: fast={fast.t} exact={exact.t}")
+    fs = {s.key: s for s in fast.states}
+    es = {s.key: s for s in exact.states}
+    if set(fs) != set(es):
+        out.append(f"trial keys differ: {set(fs) ^ set(es)}")
+        return out
+    for key, f in fs.items():
+        e = es[key]
+        if f.status != e.status:
+            out.append(f"{key} status: fast={f.status} exact={e.status}")
+        if f.finish_time != e.finish_time:
+            out.append(f"{key} finish_time: fast={f.finish_time} "
+                       f"exact={e.finish_time}")
+        if f.metrics_steps != e.metrics_steps:
+            out.append(f"{key} metrics_steps differ")
+        if f.metrics_vals != e.metrics_vals:
+            out.append(f"{key} metrics_vals differ")
+        if f.redeployments != e.redeployments:
+            out.append(f"{key} redeployments: fast={f.redeployments} "
+                       f"exact={e.redeployments}")
+        for attr in ("steps", "free_steps", "lost_steps", "ckpt_seconds",
+                     "restore_seconds"):
+            if not _close(getattr(f, attr), getattr(e, attr)):
+                out.append(f"{key} {attr}: fast={getattr(f, attr)!r} "
+                           f"exact={getattr(e, attr)!r}")
+    _diff_events(fast.events, exact.events, out)
+    if fast_res.predicted_rank != exact_res.predicted_rank:
+        out.append("predicted_rank differs")
+    if fast_res.jct != exact_res.jct:
+        out.append(f"jct: fast={fast_res.jct} exact={exact_res.jct}")
+    return out
+
+
+def run_one(workload: Workload, exact_ticks: bool, market_seed: int = 3,
+            seed: int = 0, theta: float = 0.7, mcnt: int = 3,
+            days: float = 12.0, revpred_factory: Optional[Callable] = None,
+            scheduler_factory: Optional[Callable] = None,
+            n_trials: Optional[int] = None, **engine_kw):
+    """One tuning run on a fresh market replica -> (engine, RunResult)."""
+    market = SpotMarket(days=days, seed=market_seed)
+    backend = SimTrialBackend(market.pool)
+    revpred = (revpred_factory or (lambda m: ZeroRevPred()))(market)
+    engine = build_engine(market, backend, revpred, seed=seed,
+                          exact_ticks=exact_ticks, **engine_kw)
+    scheduler = (scheduler_factory or
+                 (lambda: SpotTuneScheduler(theta=theta, mcnt=mcnt,
+                                            seed=seed)))()
+    trials = make_trials(workload)
+    if n_trials is not None:
+        trials = trials[:n_trials]
+    res = Tuner(engine, scheduler, ListSearcher(trials)).run()
+    return engine, res
+
+
+def compare_runs(workload: Workload, **kw) -> List[str]:
+    """Run fast and exact on fresh market replicas and diff them."""
+    fast_eng, fast_res = run_one(workload, exact_ticks=False, **kw)
+    exact_eng, exact_res = run_one(workload, exact_ticks=True, **kw)
+    return compare_engines(fast_eng, exact_eng, fast_res, exact_res)

@@ -59,13 +59,23 @@ class SpotTuneScheduler(Scheduler):
 
     def _predict_all(self, views: Sequence) -> Dict[str, float]:
         preds: Dict[str, float] = {}
+        jobs, job_keys = [], []
         for v in views:
             if self.theta >= 1.0 or v.key in self._stopped:
                 preds[v.key] = v.metrics_vals[-1] if v.metrics_vals else 1e9
             else:
-                preds[v.key] = self.ec.predict_final(
-                    v.metrics_steps, v.metrics_vals,
-                    v.spec.workload.max_trial_steps, seed=self.seed)
+                jobs.append((v.metrics_steps, v.metrics_vals,
+                             v.spec.workload.max_trial_steps))
+                job_keys.append(v.key)
+        if jobs:
+            batch = getattr(self.ec, "predict_final_batch", None)
+            if batch is not None:    # one dispatch per stage-length bucket
+                for key, p in zip(job_keys, batch(jobs, seed=self.seed)):
+                    preds[key] = p
+            else:                    # custom predictor without a batch path
+                for key, (steps, vals, tgt) in zip(job_keys, jobs):
+                    preds[key] = self.ec.predict_final(steps, vals, tgt,
+                                                       seed=self.seed)
         return preds
 
     def on_idle(self, views: Sequence) -> Dict[str, float]:

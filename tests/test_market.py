@@ -1,11 +1,13 @@
-"""Spot market simulator: revocation semantics, first-hour refund, billing."""
+"""Spot market simulator: revocation semantics, first-hour refund, billing,
+and the vectorized fast paths (prefix-sum integrals, block-max crossing
+search, CSV interpolation)."""
 
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.market import (DEFAULT_POOL, HOUR, MINUTE, SpotMarket,
-                               synth_trace)
+                               load_csv_traces, synth_trace)
 
 
 def test_trace_bounds_and_shape():
@@ -102,3 +104,97 @@ def test_avg_price_window():
     avg = m.avg_price(inst, 120 * MINUTE)
     tr = m.traces[inst.name]
     assert avg == pytest.approx(float(np.mean(tr[61:121])), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vectorized fast paths
+# ---------------------------------------------------------------------------
+
+
+def test_integral_matches_per_minute_loop():
+    """Prefix-sum billing == the reference per-minute summation loop,
+    including partial edge minutes and the beyond-horizon hold."""
+    m = SpotMarket(days=1, seed=7)
+    inst = m.pool[0]
+    tr = m.traces[inst.name]
+
+    def reference(t0, t1):
+        i0, i1 = int(t0 / MINUTE), int(t1 / MINUTE)
+        if i0 >= len(tr):
+            return float(tr[-1]) * (t1 - t0) / HOUR
+        if i0 >= i1:
+            return float(tr[i0]) * (t1 - t0) / HOUR
+        total = float(tr[i0]) * ((i0 + 1) * MINUTE - t0)
+        for i in range(i0 + 1, min(i1, len(tr))):
+            total += float(tr[i]) * MINUTE
+        if i1 < len(tr):
+            total += float(tr[i1]) * (t1 - i1 * MINUTE)
+        else:
+            total += float(tr[-1]) * (t1 - len(tr) * MINUTE)
+        return total / HOUR
+
+    horizon = m.horizon_s()
+    cases = [(0.0, 30.0), (25.0, 25.0 + MINUTE), (5.5, 3 * HOUR + 7.25),
+             (10 * MINUTE, 10 * MINUTE + 1.0), (horizon - HOUR, horizon + 90.0),
+             (horizon + 10.0, horizon + 70.0), (0.0, horizon)]
+    for t0, t1 in cases:
+        assert m._integral(inst, t0, t1) == pytest.approx(
+            reference(t0, t1), rel=1e-9, abs=1e-12), (t0, t1)
+
+
+def test_first_crossing_matches_linear_scan():
+    """Block-max search == naive nonzero scan for every pool market and a
+    spread of bids, including never-crossing and in-spike starts."""
+    m = SpotMarket(days=2, seed=13)
+    for inst in m.pool:
+        tr = m.traces[inst.name]
+        for start_i in (0, 7, 500, len(tr) - 3, len(tr) + 5):
+            for q in (0.0, 0.3, 0.6, 0.9, 1.01):
+                mp = float(np.min(tr)) + q * (float(np.max(tr)) - float(np.min(tr)))
+                got = m._first_crossing(inst.name, start_i, mp)
+                over = np.nonzero(tr[start_i:] > mp)[0] \
+                    if start_i < len(tr) else []
+                want = start_i + int(over[0]) if len(over) else None
+                assert got == want, (inst.name, start_i, mp)
+
+
+def test_acquire_revocation_unchanged_by_block_search():
+    m = SpotMarket(days=2, seed=3)
+    inst = m.pool[0]
+    tr = m.traces[inst.name]
+    t = 10 * MINUTE
+    mp = float(tr[10]) * 1.02
+    a = m.acquire(inst, mp, t)
+    over = np.nonzero(tr[10:] > mp)[0]
+    want = (10 + int(over[0])) * MINUTE if len(over) else None
+    if want is not None and want <= t:
+        want = t + MINUTE
+    assert a.t_revoke == want
+
+
+def test_load_csv_traces_interpolates():
+    """Regression: irregular samples must be linearly interpolated onto the
+    minute grid, not truncated to the nearest-below sample."""
+    rows = ["Timestamp,InstanceType,SpotPrice"]
+    prices = [1.0, 3.0, 2.0]
+    for i, p in enumerate(prices):
+        rows.append(f"2020-01-0{i+1}T00:00:00,v5e-1,{p}")
+    text = "\n".join(rows)
+    traces = load_csv_traces(text, DEFAULT_POOL[:1], minutes=5)
+    tr = traces["v5e-1"]
+    # 5 grid points over sample index [0, 2]: 0, .5, 1, 1.5, 2
+    expect = np.interp([0, 0.5, 1.0, 1.5, 2.0], [0, 1, 2], prices)
+    assert tr == pytest.approx(expect)
+    # the old truncation would have produced [1, 1, 3, 3, 2]
+    assert tr[1] == pytest.approx(2.0)
+    assert tr[3] == pytest.approx(2.5)
+
+
+def test_synth_trace_memoized_and_frozen():
+    inst = DEFAULT_POOL[0]
+    a = synth_trace(inst, 1440, seed=2)
+    b = synth_trace(inst, 1440, seed=2)
+    assert a is b                      # memoized
+    assert not a.flags.writeable      # read-only price oracle
+    c = synth_trace(inst, 1440, seed=3)
+    assert not np.array_equal(a, c)

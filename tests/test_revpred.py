@@ -7,10 +7,10 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import market as mkt
 from repro.core.revpred import (HISTORY, N_FEAT, algorithm2_delta,
-                                build_dataset, eq3_correct, evaluate,
-                                label_revoked, trace_features, train_model,
-                                init_revpred, revpred_logits, init_logreg,
-                                logreg_logits, weighted_bce)
+                                algorithm2_deltas, build_dataset, eq3_correct,
+                                evaluate, label_revoked, trace_features,
+                                train_model, init_revpred, revpred_logits,
+                                init_logreg, logreg_logits, weighted_bce)
 
 
 def test_algorithm2_trimmed_mean():
@@ -101,3 +101,109 @@ def test_revpred_lstm_shapes():
     present = np.zeros((3, N_FEAT + 1), np.float32)
     lg = revpred_logits(params, hist, present)
     assert lg.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# vectorized preprocessing == the reference per-row loops
+# ---------------------------------------------------------------------------
+
+
+def _trace_features_loop(trace, od_price):
+    """Pre-vectorization reference implementation (kept verbatim)."""
+    T = len(trace)
+    f = np.zeros((T, N_FEAT), np.float32)
+    p = trace / od_price
+    f[:, 0] = p
+    csum = np.cumsum(p)
+    for t in range(T):
+        lo = max(0, t - 59)
+        f[t, 1] = (csum[t] - (csum[lo - 1] if lo > 0 else 0.0)) / (t - lo + 1)
+    changes = np.concatenate([[0.0], (np.diff(trace) != 0).astype(np.float32)])
+    cch = np.cumsum(changes)
+    dur = np.zeros(T, np.float32)
+    for t in range(1, T):
+        dur[t] = 0.0 if trace[t] != trace[t - 1] else dur[t - 1] + 1.0
+    for t in range(T):
+        lo = max(0, t - 59)
+        f[t, 2] = (cch[t] - (cch[lo - 1] if lo > 0 else 0.0)) / 60.0
+    f[:, 3] = np.minimum(dur, 240.0) / 240.0
+    day = np.arange(T) // 1440
+    f[:, 4] = (day % 7 < 5).astype(np.float32)
+    f[:, 5] = ((np.arange(T) % 1440) / 60.0) / 24.0
+    return f
+
+
+def test_trace_features_matches_loop_reference():
+    market = mkt.SpotMarket(days=3, seed=9)
+    for inst in market.pool[:2]:
+        tr = market.traces[inst.name]
+        assert np.array_equal(trace_features(tr, inst.od_price),
+                              _trace_features_loop(tr, inst.od_price))
+
+
+def test_algorithm2_deltas_matches_scalar():
+    market = mkt.SpotMarket(days=3, seed=4)
+    tr = market.traces[market.pool[0].name]
+    ts = np.arange(60, len(tr) - 61, 17)
+    batched = algorithm2_deltas(tr, ts)
+    scalar = np.array([algorithm2_delta(tr, int(t)) for t in ts])
+    assert np.array_equal(batched, scalar)
+    # partial-window fallback (t < 60) agrees too
+    ts_small = np.array([5, 30, 59])
+    assert np.array_equal(
+        algorithm2_deltas(tr, ts_small),
+        np.array([algorithm2_delta(tr, int(t)) for t in ts_small]))
+
+
+def test_build_dataset_matches_loop_reference():
+    """The vectorized builder reproduces the per-row loop bit-for-bit,
+    including the RNG draw stream for both delta modes."""
+    market = mkt.SpotMarket(days=3, seed=5)
+    inst = market.pool[1]
+    tr = market.traces[inst.name]
+    t_hi = 2 * 1440
+    for mode in ("algo2", "random"):
+        got = build_dataset(tr, inst.od_price, 0, t_hi, mode,
+                            np.random.default_rng(11), stride=7)
+        feats = _trace_features_loop(tr, inst.od_price)
+        rng = np.random.default_rng(11)
+        H, P, Y = [], [], []
+        for i, t in enumerate(range(max(0, HISTORY + 1), t_hi - 61, 7)):
+            if mode == "algo2" and i % 2 == 0:
+                delta = algorithm2_delta(tr, t)
+            else:
+                delta = float(rng.uniform(0.00001, 0.2)) * (inst.od_price / 0.33)
+            b = float(tr[t]) + delta
+            H.append(feats[t - HISTORY: t])
+            P.append(np.concatenate(
+                [feats[t], [b / inst.od_price]]).astype(np.float32))
+            Y.append(1.0 if label_revoked(tr, t, b) else 0.0)
+        assert np.array_equal(got["hist"], np.stack(H).astype(np.float32))
+        assert np.array_equal(got["present"], np.stack(P).astype(np.float32))
+        assert np.array_equal(got["label"], np.array(Y, np.float32))
+
+
+def test_predict_pool_matches_scalar_predict():
+    """The pool-batched forward agrees with per-market dispatch (vmap-level
+    numerics) and hits the per-minute cache on repeat queries."""
+    import jax
+
+    from repro.core.revpred import (RevPred, TrainedPredictor, init_logreg,
+                                    logreg_logits)
+
+    market = mkt.SpotMarket(days=2, seed=6)
+    preds = {}
+    for j, inst in enumerate(market.pool):
+        params = init_logreg(jax.random.key(j))
+        params = {"w": params["w"] + 0.01 * (j + 1), "b": params["b"] - 0.1 * j}
+        preds[inst.name] = TrainedPredictor(logreg_logits, params,
+                                            pos_frac=0.2 + 0.1 * j,
+                                            use_eq3=True)
+    rp = RevPred(market, preds)
+    t = 3 * mkt.HOUR
+    mps = [market.price(i, t) * 1.1 for i in market.pool]
+    batched = rp.predict_pool(market.pool, t, mps)
+    fresh = RevPred(market, preds)
+    scalar = [fresh.predict(i, t, mp) for i, mp in zip(market.pool, mps)]
+    assert batched == pytest.approx(scalar, rel=1e-5, abs=1e-6)
+    assert rp.predict_pool(market.pool, t, mps) == batched  # cache hit path

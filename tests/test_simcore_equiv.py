@@ -1,0 +1,72 @@
+"""Event-driven fast path == legacy exact-tick path, across seeds/policies.
+
+The equivalence contract (see repro.tuner.equivalence): billed and refunded
+dollars, per-allocation billing records, trial finish times, per-trial metric
+histories, and the full event log must match between
+``EngineConfig(exact_ticks=False)`` (the boundary-jumping default) and
+``exact_ticks=True`` (the verbatim Algorithm 1 SLEEP loop).  Step counters
+are compared to a tight relative tolerance (fused vs per-tick summation).
+
+Fixed-seed parametrizations always run; the hypothesis property widens the
+seed space when the library is installed (tests/_hypothesis_compat.py lets it
+degrade to a clean skip otherwise).
+"""
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.revpred import OracleRevPred
+from repro.core.trial import WORKLOADS
+from repro.tuner import ASHAScheduler
+from repro.tuner.equivalence import compare_runs
+
+LOR = WORKLOADS[0]
+
+
+@pytest.mark.parametrize("market_seed", [1, 3, 7, 11, 23])
+def test_fast_equals_exact_across_market_seeds(market_seed):
+    diffs = compare_runs(LOR, market_seed=market_seed, days=8.0)
+    assert not diffs, "\n".join(diffs)
+
+
+@pytest.mark.parametrize("workload", WORKLOADS[1:4], ids=lambda w: w.name)
+def test_fast_equals_exact_across_workloads(workload):
+    diffs = compare_runs(workload, days=8.0, n_trials=8)
+    assert not diffs, "\n".join(diffs)
+
+
+def test_fast_equals_exact_with_oracle_revpred():
+    """Oracle p(revoke) drives the engine into the refund-chasing regime —
+    many revocations, rollbacks, and requeues to replay."""
+    diffs = compare_runs(LOR, market_seed=3, days=8.0,
+                         revpred_factory=lambda m: OracleRevPred(m))
+    assert not diffs, "\n".join(diffs)
+
+
+def test_fast_equals_exact_theta_one():
+    """theta=1: no phase-2 promotions — pure run-to-completion engine."""
+    diffs = compare_runs(LOR, theta=1.0, days=8.0, n_trials=6)
+    assert not diffs, "\n".join(diffs)
+
+
+def test_fast_equals_exact_asha_pause_promote():
+    """ASHA exercises PAUSE decisions, async promotions, and idle resumes."""
+    diffs = compare_runs(LOR, days=8.0,
+                         scheduler_factory=lambda: ASHAScheduler(eta=2))
+    assert not diffs, "\n".join(diffs)
+
+
+def test_fast_equals_exact_straggler_mode():
+    """Straggler mitigation needs the live perf matrix every tick; the fast
+    path degrades to single-tick stepping and must stay equivalent."""
+    diffs = compare_runs(LOR, days=8.0, n_trials=4, theta=0.5,
+                         straggler_factor=1.5)
+    assert not diffs, "\n".join(diffs)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_fast_equals_exact_property(market_seed, engine_seed):
+    diffs = compare_runs(LOR, market_seed=market_seed, seed=engine_seed,
+                         days=6.0, n_trials=6)
+    assert not diffs, "\n".join(diffs)
