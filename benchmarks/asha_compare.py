@@ -1,11 +1,15 @@
-"""Beyond-paper: ASHA vs the paper's grid policy on the same transient engine.
+"""Beyond-paper: ASHA and adaptive search vs the paper's grid policy on the
+same transient engine.
 
 One row per (workload, policy): total $ cost, JCT, and whether the true-best
 HP setting survived into the policy's top-3.  The point of the comparison:
 the pluggable split means a modern multi-fidelity search policy rides the
 identical market/provisioner/refund mechanics as the paper's exhaustive grid,
 and the revocation-forced checkpoints ASHA exploits as free rung boundaries
-come from the engine, not the policy.
+come from the engine, not the policy.  The third policy exercises the
+incremental-suggestion path: ``AdaptiveGridSearcher`` starts from a random
+subset and narrows around the best finished results (``Searcher.on_result``
+feedback), spending fewer trials than the exhaustive grid.
 """
 
 from __future__ import annotations
@@ -13,25 +17,39 @@ from __future__ import annotations
 from benchmarks.common import Timer, build_tuner, fresh_market
 from repro.core.provisioner import ZeroRevPred
 from repro.core.trial import WORKLOADS, SimTrialBackend
-from repro.tuner import ASHAScheduler, GridSearcher, SpotTuneScheduler
+from repro.tuner import (AdaptiveGridSearcher, AdaptiveSpotTuneScheduler,
+                         ASHAScheduler, GridSearcher, SpotTuneScheduler)
+
+
+def _policies(w, seed):
+    yield ("spottune", SpotTuneScheduler(theta=0.7, mcnt=3, seed=seed),
+           GridSearcher(w), None)
+    yield ("asha", ASHAScheduler(eta=3), GridSearcher(w), None)
+    yield ("adaptive",
+           AdaptiveSpotTuneScheduler(theta=0.7, mcnt=3, seed=seed,
+                                     suggest_batch=4),
+           AdaptiveGridSearcher(w, initial=6, batch=4, seed=seed), 6)
 
 
 def run(workloads=None, seed: int = 0):
     rows = []
     for w in (workloads or WORKLOADS):
         results = {}
-        for name, scheduler in (
-                ("spottune", SpotTuneScheduler(theta=0.7, mcnt=3, seed=seed)),
-                ("asha", ASHAScheduler(eta=3))):
+        for name, scheduler, searcher, initial in _policies(w, seed):
             m = fresh_market()
             backend = SimTrialBackend(m.pool)
             with Timer() as tm:
                 res = build_tuner(m, backend, ZeroRevPred(), scheduler,
-                                  GridSearcher(w), seed=seed).run()
+                                  searcher, seed=seed,
+                                  initial_trials=initial).run()
             results[name] = res
             rows.append((f"asha_cmp_{w.name}_{name}", tm.seconds * 1e6,
                          f"cost={res.cost:.2f}|jct_h={res.jct/3600:.2f}"
-                         f"|top3={int(res.top3_contains_best)}"))
+                         f"|top3={int(res.top3_contains_best)}"
+                         f"|trials={len(res.per_trial_steps)}"))
         ratio = results["asha"].cost / max(results["spottune"].cost, 1e-9)
         rows.append((f"asha_cmp_{w.name}_cost_ratio", 0.0, f"{ratio:.3f}"))
+        ratio = results["adaptive"].cost / max(results["spottune"].cost, 1e-9)
+        rows.append((f"asha_cmp_{w.name}_adaptive_cost_ratio", 0.0,
+                     f"{ratio:.3f}"))
     return rows

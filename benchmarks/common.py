@@ -25,10 +25,10 @@ def fresh_market(seed: int = MARKET_SEED, **kw) -> SpotMarket:
 
 def build_tuner(market: SpotMarket, backend: SimTrialBackend, revpred,
                 scheduler: Scheduler, searcher: Searcher, seed: int = 0,
-                **engine_kw) -> Tuner:
+                initial_trials=None, **engine_kw) -> Tuner:
     """Engine + policy in one call — the benchmarks' common construction."""
     engine = build_engine(market, backend, revpred, seed=seed, **engine_kw)
-    return Tuner(engine, scheduler, searcher)
+    return Tuner(engine, scheduler, searcher, initial_trials=initial_trials)
 
 
 def run_approaches(workload: Workload, revpred_factory, thetas=(0.7, 1.0),

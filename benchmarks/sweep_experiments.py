@@ -1,0 +1,270 @@
+"""Multi-seed figure benchmarks through the sweep runtime -> EXPERIMENTS.md.
+
+Every headline SpotTune figure is a distribution over spot-market
+randomness; this driver re-runs fig7 (cost/JCT/PCR vs single-spot
+baselines), fig8 (θ sensitivity), fig9 (refund contribution), and the ASHA /
+adaptive-search comparison at many market seeds through
+``repro.sweep.SweepRunner`` and writes mean ± 95% CI tables.
+
+    PYTHONPATH=src:. python -m benchmarks.sweep_experiments \
+        --seeds 20 --out EXPERIMENTS.md
+
+``--quick`` (CI smoke) trims to one workload and 4 seeds.  The sweep grids
+share per-seed market work across every figure axis (θ, policy, workload),
+so the full 900+-replica suite runs in minutes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.market import SpotMarket
+from repro.core.orchestrator import run_single_spot_baseline
+from repro.core.trial import WORKLOADS, SimTrialBackend, make_trials
+from repro.sweep import (SweepResult, SweepRunner, markdown_table,
+                         scenario_grid, summarize)
+
+MARKET_DAYS = 12.0
+
+
+def _seed_list(n: int, base: int = 100) -> List[int]:
+    return list(range(base, base + n))
+
+
+def _by_seed(result: SweepResult, metric, where) -> Dict[int, List[float]]:
+    """metric values grouped by market seed (summed/averaged by caller)."""
+    out: Dict[int, List[float]] = {}
+    fn = metric if callable(metric) else (lambda r, a=metric: getattr(r, a))
+    for rep in result.replicas:
+        if where is not None and not where(rep.spec):
+            continue
+        out.setdefault(rep.spec.market_seed, []).append(fn(rep.result))
+    return out
+
+
+def _seed_sums(result, metric, where=None) -> List[float]:
+    return [sum(v) for _, v in sorted(_by_seed(result, metric, where).items())]
+
+
+def _seed_means(result, metric, where=None) -> List[float]:
+    return [sum(v) / len(v)
+            for _, v in sorted(_by_seed(result, metric, where).items())]
+
+
+# ---------------------------------------------------------------------------
+# fig7 + fig9: cost / JCT / PCR vs baselines, refund contribution
+# ---------------------------------------------------------------------------
+
+
+def run_fig7_fig9(workloads, seeds, runner) -> List[str]:
+    specs = scenario_grid([w.name for w in workloads], seeds,
+                          theta=[0.7, 1.0], revpred="oracle",
+                          days=MARKET_DAYS)
+    res = runner.run(specs)
+
+    # single-spot baselines per (workload, seed): no engine, cheap
+    base_cost = {"cheapest": {}, "fastest": {}}
+    base_pcr = {"cheapest": {}, "fastest": {}}
+    for seed in seeds:
+        for kind in ("cheapest", "fastest"):
+            base_cost[kind][seed] = 0.0
+            base_pcr[kind][seed] = []
+        for w in workloads:
+            m = SpotMarket(days=MARKET_DAYS, seed=seed)
+            backend = SimTrialBackend(m.pool)
+            trials = make_trials(w)
+            for kind, inst in (
+                    ("cheapest", min(m.pool, key=lambda i: i.od_price)),
+                    ("fastest", max(m.pool, key=lambda i: i.chips))):
+                m2 = SpotMarket(days=MARKET_DAYS, seed=seed)
+                r = run_single_spot_baseline(m2, backend, trials, inst)
+                base_cost[kind][seed] += r.cost
+                base_pcr[kind][seed].append(r.pcr())
+
+    t07 = lambda s: s.theta == 0.7
+    t10 = lambda s: s.theta == 1.0
+    cost07 = _seed_sums(res, "cost", t07)
+    cost10 = _seed_sums(res, "cost", t10)
+    seeds_sorted = sorted(seeds)
+    bc = [base_cost["cheapest"][s] for s in seeds_sorted]
+    bf = [base_cost["fastest"][s] for s in seeds_sorted]
+
+    rows = [
+        ("SpotTune(0.7) total cost [$]", summarize(cost07)),
+        ("SpotTune(1.0) total cost [$]", summarize(cost10)),
+        ("Single-spot cheapest cost [$]", summarize(bc)),
+        ("Single-spot fastest cost [$]", summarize(bf)),
+        ("saving vs cheapest [%]",
+         summarize([100 * (1 - a / b) for a, b in zip(cost07, bc)])),
+        ("saving vs fastest [%]",
+         summarize([100 * (1 - a / b) for a, b in zip(cost07, bf)])),
+        ("mean JCT SpotTune(0.7) [h]",
+         summarize([v / 3600 for v in _seed_means(res, "jct", t07)])),
+        ("PCR vs cheapest [x]",
+         summarize([a / (sum(base_pcr["cheapest"][s]) /
+                         len(base_pcr["cheapest"][s]))
+                    for a, s in zip(_seed_means(res, lambda r: r.pcr(), t07),
+                                    seeds_sorted)])),
+        ("PCR vs fastest [x]",
+         summarize([a / (sum(base_pcr["fastest"][s]) /
+                         len(base_pcr["fastest"][s]))
+                    for a, s in zip(_seed_means(res, lambda r: r.pcr(), t07),
+                                    seeds_sorted)])),
+        ("top-3 selection accuracy",
+         summarize(_seed_means(res, "top3_contains_best", t07))),
+        ("top-1 selection accuracy",
+         summarize(_seed_means(res, "top1_correct", t07))),
+    ]
+    fig7 = ["## fig7 — cost / JCT / selection vs single-spot baselines "
+            f"(n={len(seeds)} seeds, {len(workloads)} workloads)", "",
+            markdown_table(
+                ["metric", "mean ± 95% CI", "n"],
+                [(name, s.fmt(3), s.n) for name, s in rows]), ""]
+
+    free = _seed_means(res, "free_frac", t07)
+    refunded = _seed_sums(res, "refunded", t07)
+    ratio = [r / max(c, 1e-9) for r, c in zip(refunded, cost07)]
+    fig9_rows = [
+        ("free (refunded) step fraction, θ=0.7", summarize(free)),
+        ("refunded / billed [$ ratio]", summarize(ratio)),
+        ("total refunded [$]", summarize(refunded)),
+    ]
+    per_w = res.summarize("free_frac", by=("workload",), where=t07)
+    for (wname,), s in sorted(per_w.items()):
+        fig9_rows.append((f"free step fraction — {wname}", s))
+    fig9 = ["## fig9 — refund (free resource) contribution "
+            f"(n={len(seeds)} seeds)", "",
+            markdown_table(["metric", "mean ± 95% CI", "n"],
+                           [(name, s.fmt(4), s.n) for name, s in fig9_rows]),
+            ""]
+    return fig7 + fig9
+
+
+# ---------------------------------------------------------------------------
+# fig8: θ sensitivity
+# ---------------------------------------------------------------------------
+
+
+def run_fig8(workloads, seeds, runner,
+             thetas=(0.1, 0.3, 0.5, 0.7, 0.9, 1.0)) -> List[str]:
+    specs = scenario_grid([w.name for w in workloads], seeds,
+                          theta=list(thetas), revpred="oracle",
+                          days=MARKET_DAYS)
+    res = runner.run(specs)
+    body = []
+    for theta in thetas:
+        sel = (lambda s, th=theta: s.theta == th)
+        cost = summarize(_seed_sums(res, "cost", sel))
+        jct = summarize([v / 3600 for v in _seed_means(res, "jct", sel)])
+        top1 = summarize(_seed_means(res, "top1_correct", sel))
+        top3 = summarize(_seed_means(res, "top3_contains_best", sel))
+        body.append((f"{theta:.1f}", cost.fmt(2), jct.fmt(2),
+                     top1.fmt(2), top3.fmt(2), cost.n))
+    return [f"## fig8 — θ sensitivity (n={len(seeds)} seeds, "
+            f"{len(workloads)} workloads)", "",
+            markdown_table(["θ", "total cost [$]", "mean JCT [h]",
+                            "top-1 acc", "top-3 acc", "n"], body), ""]
+
+
+# ---------------------------------------------------------------------------
+# ASHA / adaptive-search comparison
+# ---------------------------------------------------------------------------
+
+
+def run_asha(workloads, seeds, runner) -> List[str]:
+    names = [w.name for w in workloads]
+    specs = scenario_grid(names, seeds, revpred="zero", days=MARKET_DAYS,
+                          scheduler="spottune", tag="spottune")
+    specs += scenario_grid(names, seeds, revpred="zero", days=MARKET_DAYS,
+                           scheduler="asha", tag="asha")
+    specs += scenario_grid(names, seeds, revpred="zero", days=MARKET_DAYS,
+                           scheduler="adaptive", searcher="adaptive",
+                           initial_trials=6, tag="adaptive")
+    res = runner.run(specs)
+    body = []
+    for tag in ("spottune", "asha", "adaptive"):
+        sel = (lambda s, tg=tag: s.tag == tg)
+        cost = summarize(_seed_sums(res, "cost", sel))
+        jct = summarize([v / 3600 for v in _seed_means(res, "jct", sel)])
+        top3 = summarize(_seed_means(res, "top3_contains_best", sel))
+        trials = summarize(_seed_means(
+            res, lambda r: len(r.per_trial_steps), sel))
+        body.append((tag, cost.fmt(2), jct.fmt(2), top3.fmt(2),
+                     trials.fmt(1), cost.n))
+    sp = _seed_sums(res, "cost", lambda s: s.tag == "spottune")
+    as_ = _seed_sums(res, "cost", lambda s: s.tag == "asha")
+    ad = _seed_sums(res, "cost", lambda s: s.tag == "adaptive")
+    ratios = [("ASHA / SpotTune cost ratio",
+               summarize([a / max(b, 1e-9) for a, b in zip(as_, sp)])),
+              ("adaptive / SpotTune cost ratio",
+               summarize([a / max(b, 1e-9) for a, b in zip(ad, sp)]))]
+    return [f"## ASHA + adaptive search vs the paper's grid policy "
+            f"(n={len(seeds)} seeds, {len(workloads)} workloads)", "",
+            markdown_table(["policy", "total cost [$]", "mean JCT [h]",
+                            "top-3 acc", "mean trials", "n"], body), "",
+            markdown_table(["metric", "mean ± 95% CI", "n"],
+                           [(n, s.fmt(3), s.n) for n, s in ratios]), ""]
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=20,
+                    help="market seeds per figure (>=20 for the record)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 1 workload, min(seeds, 4) seeds")
+    ap.add_argument("--only", default=None,
+                    help="comma list from: fig7, fig8, asha "
+                         "(fig7 includes fig9)")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args(argv)
+
+    n_seeds = min(args.seeds, 4) if args.quick else args.seeds
+    seeds = _seed_list(n_seeds)
+    workloads = WORKLOADS[:1] if args.quick else WORKLOADS
+    fig8_workloads = WORKLOADS[:1] if args.quick else WORKLOADS[:3]
+    only = set(args.only.split(",")) if args.only else {"fig7", "fig8", "asha"}
+
+    runner = SweepRunner()
+    t0 = time.perf_counter()
+    sections = [
+        "# EXPERIMENTS — multi-seed confidence intervals",
+        "",
+        "Every figure benchmark re-run across independent spot-market",
+        f"realizations (market seeds {seeds[0]}..{seeds[-1]}) through the",
+        "batched sweep runtime (`repro.sweep`).  Values are mean ± 95% CI",
+        "(Student t) over seeds; per-seed values aggregate the workloads in",
+        "the figure's suite.  Regenerate with:",
+        "", "```",
+        f"PYTHONPATH=src:. python -m benchmarks.sweep_experiments "
+        f"--seeds {n_seeds}" + (" --quick" if args.quick else ""),
+        "```", "",
+        "The synthetic markets are less volatile than the paper's 2016-17",
+        "AWS dumps, so refund fractions sit below the paper's 77.5%; the",
+        "orderings (SpotTune(0.7) cheapest, JCT between the baselines,",
+        "top-3 accuracy ~1 at θ=0.7) are the reproduced claims.", ""]
+    if "fig7" in only or "fig9" in only:
+        sections += run_fig7_fig9(workloads, seeds, runner)
+        print(f"# fig7+fig9 done at {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+    if "fig8" in only:
+        sections += run_fig8(fig8_workloads, seeds, runner)
+        print(f"# fig8 done at {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+    if "asha" in only:
+        sections += run_asha(workloads, seeds, runner)
+        print(f"# asha done at {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+    sections.append(f"_Generated in {time.perf_counter()-t0:.0f}s wall._")
+    with open(args.out, "w") as fh:
+        fh.write("\n".join(sections) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -146,6 +146,12 @@ _fit_lm_masked_batch = jax.jit(jax.vmap(
     jax.vmap(_fit_lm_masked_raw, in_axes=(None, None, None, None, 0)),
     in_axes=(0, 0, 0, 0, None)))
 
+# smallest stage-batch XLA is fed: per-row results are batch-size-invariant
+# from 3 rows up (1- and 2-row programs compile to different float paths)
+_MIN_BATCH_ROWS = 3
+# largest row chunk per dispatch: bounds the compiled-shape space
+_MAX_BATCH_ROWS = 64
+
 
 def _restart_inits(n_restarts: int, seed: int) -> np.ndarray:
     rng = np.random.default_rng(seed)
@@ -180,28 +186,41 @@ def fit_stage_batch(stages: List[Tuple[np.ndarray, np.ndarray]],
         b = 8 if L <= 8 else 16 if L <= 16 else ((L + 31) // 32) * 32
         buckets.setdefault(b, []).append(i)
     fits: List[Optional[dict]] = [None] * len(prepared)
-    for b, idxs in buckets.items():
-        kn = np.zeros((len(idxs), b), np.float32)
-        yn = np.zeros_like(kn)
-        mask = np.zeros_like(kn)
-        n_real = np.zeros(len(idxs), np.float32)
-        for row, i in enumerate(idxs):
-            L = len(prepared[i][0])
-            kn[row, :L] = prepared[i][0]
-            yn[row, :L] = prepared[i][1]
-            mask[row, :L] = 1.0
-            n_real[row] = L
-        a_all, c_all = _fit_lm_masked_batch(
-            jnp.asarray(kn), jnp.asarray(yn), jnp.asarray(mask),
-            jnp.asarray(n_real), inits)
-        a_all = np.asarray(a_all)
-        c_all = np.asarray(c_all)
-        for row, i in enumerate(idxs):
-            r = int(np.argmin(c_all[row]))
-            _, _, k_scale, y_off, y_scale = prepared[i]
-            fits[i] = {"alpha": a_all[row, r], "k_scale": k_scale,
-                       "y_off": y_off, "y_scale": y_scale,
-                       "rmse": float(np.sqrt(float(c_all[row, r])))}
+    for b, all_idxs in buckets.items():
+        # XLA specializes the vmapped solve for tiny batches (1-2 rows) with
+        # different float results than the >=3-row program; padding every
+        # bucket with masked dummy rows makes each row's fit independent of
+        # how many stages share its dispatch — a replica fitted alone and
+        # the same replica inside a sweep-wide batch agree bit-for-bit.
+        # Row counts are chunked to <=64 and padded to powers of two, so
+        # arbitrary cross-replica batches reuse a handful of compiled
+        # programs ({4,8,16,32,64} x length buckets) instead of recompiling
+        # per count.
+        for c0 in range(0, len(all_idxs), _MAX_BATCH_ROWS):
+            idxs = all_idxs[c0:c0 + _MAX_BATCH_ROWS]
+            rows = max(len(idxs), _MIN_BATCH_ROWS)
+            rows = 1 << (rows - 1).bit_length()
+            kn = np.zeros((rows, b), np.float32)
+            yn = np.zeros_like(kn)
+            mask = np.zeros_like(kn)
+            n_real = np.ones(rows, np.float32)
+            for row, i in enumerate(idxs):
+                L = len(prepared[i][0])
+                kn[row, :L] = prepared[i][0]
+                yn[row, :L] = prepared[i][1]
+                mask[row, :L] = 1.0
+                n_real[row] = L
+            a_all, c_all = _fit_lm_masked_batch(
+                jnp.asarray(kn), jnp.asarray(yn), jnp.asarray(mask),
+                jnp.asarray(n_real), inits)
+            a_all = np.asarray(a_all)
+            c_all = np.asarray(c_all)
+            for row, i in enumerate(idxs):
+                r = int(np.argmin(c_all[row]))
+                _, _, k_scale, y_off, y_scale = prepared[i]
+                fits[i] = {"alpha": a_all[row, r], "k_scale": k_scale,
+                           "y_off": y_off, "y_scale": y_scale,
+                           "rmse": float(np.sqrt(float(c_all[row, r])))}
     return fits
 
 
@@ -324,6 +343,34 @@ class EarlyCurve:
             for (i, _, _, k_pred), fit in zip(jobs, fits):
                 out[i] = predict_from_fit(fit, k_pred)
         return out
+
+
+def predict_final_grouped(requests: Sequence[Tuple["EarlyCurve", Sequence[Tuple], int]]
+                          ) -> List[List[float]]:
+    """``predict_final_batch`` across many callers in as few dispatches as
+    the stage-length buckets allow — the sweep runtime's cross-replica batch
+    point.  ``requests`` is a list of ``(predictor, trajs, seed)``; trajs
+    from requests sharing a predictor configuration and restart seed are
+    fitted in one stacked call, and every per-trajectory result is
+    bit-identical to the per-caller path (masked-row bucketing plus the
+    >=3-row floor make each fit independent of its batch neighbors)."""
+    groups: dict = {}
+    for ri, (ec, trajs, seed) in enumerate(requests):
+        key = (type(ec), dataclasses.astuple(ec), seed)
+        groups.setdefault(key, []).append(ri)
+    out: List[Optional[List[float]]] = [None] * len(requests)
+    for idxs in groups.values():
+        ec, _, seed = requests[idxs[0]]
+        merged = []
+        for ri in idxs:
+            merged.extend(requests[ri][1])
+        preds = ec.predict_final_batch(merged, seed=seed)
+        pos = 0
+        for ri in idxs:
+            n = len(requests[ri][1])
+            out[ri] = preds[pos:pos + n]
+            pos += n
+    return out
 
 
 @dataclasses.dataclass

@@ -23,6 +23,7 @@ replay loader accepts the Kaggle ``us-east-1.csv`` schema used by the paper
 
 from __future__ import annotations
 
+import copy
 import csv
 import dataclasses
 import io
@@ -65,76 +66,193 @@ DEFAULT_POOL = [
 
 # Synthesized traces are deterministic in their arguments, and every
 # benchmark approach/seed-sweep re-creates the same market replica; memoize
-# the (expensive, pure-Python OU recursion) synthesis.  Cached arrays are
-# frozen — SpotMarket treats traces as read-only price oracles.
+# the (expensive OU recursion) synthesis.  Cached arrays are frozen —
+# SpotMarket treats traces as read-only price oracles.
 _TRACE_CACHE: Dict[tuple, np.ndarray] = {}
+
+
+def _trace_key(inst: InstanceType, minutes: int, seed: int, discount: float,
+               vol: float, spike_rate_per_day: float,
+               spike_len_mean_min: float) -> tuple:
+    return (inst.name, inst.od_price, minutes, seed, discount, vol,
+            spike_rate_per_day, spike_len_mean_min)
 
 
 def synth_trace(inst: InstanceType, minutes: int, seed: int,
                 discount: float = 0.30, vol: float = 0.02,
                 spike_rate_per_day: float = 16.0, spike_len_mean_min: float = 35.0):
-    cache_key = (inst.name, inst.od_price, minutes, seed, discount, vol,
-                 spike_rate_per_day, spike_len_mean_min)
+    cache_key = _trace_key(inst, minutes, seed, discount, vol,
+                           spike_rate_per_day, spike_len_mean_min)
     cached = _TRACE_CACHE.get(cache_key)
     if cached is not None:
         return cached
-    out = _synth_trace(inst, minutes, seed, discount, vol,
+    synth_traces_batch([(inst, seed)], minutes, discount, vol,
                        spike_rate_per_day, spike_len_mean_min)
-    out.flags.writeable = False
-    _TRACE_CACHE[cache_key] = out
-    return out
+    return _TRACE_CACHE[cache_key]
 
 
-def _synth_trace(inst: InstanceType, minutes: int, seed: int,
-                 discount: float, vol: float,
-                 spike_rate_per_day: float, spike_len_mean_min: float):
-    # spike defaults calibrated to the paper's Fig. 1 (r3.xlarge repeatedly
-    # oscillating above on-demand within days) — the refund-rich regime that
-    # makes aggressive bidding profitable (paper Fig. 9: ~77% free steps)
-    """One price per minute.  Returns float32 array of $/hour prices.
+def _trace_draws(inst: InstanceType, minutes: int, seed: int, discount: float,
+                 vol: float, spike_rate_per_day: float,
+                 spike_len_mean_min: float) -> dict:
+    """Every random draw of one trace, in the synthesis order.
 
-    OU around ``discount * od`` + diurnal swell + demand spikes above OD.
-    Each market gets its own RNG stream -> uncorrelated fluctuations
-    (paper §II-A trait 2).
-    """
+    All draws are independent of the OU path itself (spike/hold parameters
+    are placed on the curve later), which is what lets a replica sweep stack
+    the expensive recursion across traces while each trace keeps its own RNG
+    stream bit-for-bit (paper §II-A trait 2: uncorrelated markets)."""
     rng = np.random.default_rng(np.random.SeedSequence([stable_hash(inst.name) & 0xFFFF, seed]))
     # per-market discount depth varies (paper §II-A: markets are uncorrelated
     # and differently supplied); bigger slices tend to be deeper-discounted
     discount = float(rng.uniform(0.8, 1.2)) * discount
     base = inst.od_price * discount
-    theta = 0.05
-    x = np.zeros(minutes)
-    x[0] = base
     noise = rng.standard_normal(minutes) * vol * base
-    for t in range(1, minutes):
-        x[t] = x[t - 1] + theta * (base - x[t - 1]) + noise[t]
-    # diurnal demand (peaks mid-day)
-    tod = (np.arange(minutes) % 1440) / 1440.0
-    x = x * (1.0 + 0.15 * np.sin(2 * np.pi * (tod - 0.25)))
     # demand spikes: price jumps toward/above on-demand
     n_spikes = rng.poisson(spike_rate_per_day * minutes / 1440.0)
+    spikes = []
     for _ in range(n_spikes):
         start = rng.integers(0, minutes)
         ln = max(2, int(rng.exponential(spike_len_mean_min)))
         level = inst.od_price * rng.uniform(0.9, 1.4)
+        spikes.append((start, ln, level))
+    # repricing-hold lengths: block k holds for holds[k] minutes.  The draw
+    # count is data-dependent (one per block plus priming and one trailing
+    # draw, like the legacy while-loop) — a cloned probe generator finds it,
+    # then one array draw consumes the real stream identically to that many
+    # scalar draws (numpy Generators fill arrays from the same stream)
+    probe = copy.deepcopy(rng)
+    v = probe.integers(3, 30, size=minutes // 3 + 2)  # holds >= 3 bounds blocks
+    blocks = int(np.searchsorted(np.cumsum(v), minutes, side="left")) + 1
+    holds = rng.integers(3, 30, size=blocks + 1)
+    micro = rng.normal(0, 0.004 * inst.od_price, minutes)
+    return {"base": base, "noise": noise, "spikes": spikes, "holds": holds,
+            "micro": micro}
+
+
+def _trace_finish(inst: InstanceType, minutes: int, x: np.ndarray,
+                  draws: dict) -> np.ndarray:
+    """Diurnal swell, spikes, repricing holds, micro-drift on an OU path."""
+    # diurnal demand (peaks mid-day)
+    tod = (np.arange(minutes) % 1440) / 1440.0
+    x = x * (1.0 + 0.15 * np.sin(2 * np.pi * (tod - 0.25)))
+    for start, ln, level in draws["spikes"]:
         end = min(minutes, start + ln)
         ramp = np.linspace(1.0, 0.0, end - start) ** 2
         x[start:end] = np.maximum(x[start:end], level * (1 - 0.5 * ramp))
     x = np.clip(x, 0.05 * inst.od_price, 2.0 * inst.od_price)
     # spot prices move in discrete repricing events: hold for random runs,
     # plus per-minute micro-drift (real markets re-quote continuously; a
-    # perfectly flat hold degenerates Algorithm 2's trimmed |Δ| to zero)
-    hold = rng.integers(3, 30)
-    out = np.copy(x)
-    i = 0
-    while i < minutes:
-        j = min(minutes, i + hold)
-        out[i:j] = x[i]
-        i = j
-        hold = int(rng.integers(3, 30))
-    out = out + rng.normal(0, 0.004 * inst.od_price, minutes)
+    # perfectly flat hold degenerates Algorithm 2's trimmed |Δ| to zero).
+    # out[m] = x[start of m's hold block]: one gather instead of a block loop
+    holds = np.asarray(draws["holds"], np.int64)
+    starts = np.concatenate([[0], np.cumsum(holds)])
+    n_blocks = int(np.searchsorted(starts, minutes, side="left"))
+    starts = starts[:n_blocks]
+    out = np.repeat(x[starts], np.diff(np.append(starts, minutes)))
+    out = out + draws["micro"]
     out = np.clip(out, 0.05 * inst.od_price, 2.0 * inst.od_price)
     return out.astype(np.float32)
+
+
+def synth_traces_batch(jobs, minutes: int, discount: float = 0.30,
+                       vol: float = 0.02, spike_rate_per_day: float = 16.0,
+                       spike_len_mean_min: float = 35.0) -> None:
+    """Synthesize many ``(inst, seed)`` traces at once into the trace memo.
+
+    The OU recursion — the dominant cost of a fresh market replica — runs as
+    one loop over simulated minutes with all pending traces stacked on the
+    replica axis; elementwise IEEE arithmetic makes each row bit-identical
+    to the one-at-a-time path (pinned by tests/test_market.py).  A sweep
+    over R market seeds pays one recursion instead of R x pool recursions.
+    """
+    # spike defaults calibrated to the paper's Fig. 1 (r3.xlarge repeatedly
+    # oscillating above on-demand within days) — the refund-rich regime that
+    # makes aggressive bidding profitable (paper Fig. 9: ~77% free steps)
+    pending = []
+    for inst, seed in jobs:
+        key = _trace_key(inst, minutes, seed, discount, vol,
+                         spike_rate_per_day, spike_len_mean_min)
+        if key not in _TRACE_CACHE:
+            pending.append((key, inst, seed))
+    if not pending:
+        return
+    draws = [_trace_draws(inst, minutes, seed, discount, vol,
+                          spike_rate_per_day, spike_len_mean_min)
+             for _, inst, seed in pending]
+    theta = 0.05
+    if len(pending) < 16:
+        # few traces: a per-trace Python-float fold beats numpy's
+        # per-iteration overhead (same IEEE double ops, same bits)
+        paths = []
+        for d in draws:
+            noise = d["noise"].tolist()
+            xt = d["base"]
+            path = [xt]
+            for t in range(1, minutes):
+                xt = xt + theta * (d["base"] - xt) + noise[t]
+                path.append(xt)
+            paths.append(np.asarray(path))
+    else:
+        # (minutes, R) so each recursion step touches one contiguous row
+        base = np.array([d["base"] for d in draws])
+        x = np.zeros((minutes, len(pending)))
+        x[0] = base
+        noise = np.stack([d["noise"] for d in draws], axis=1)
+        for t in range(1, minutes):
+            x[t] = x[t - 1] + theta * (base - x[t - 1]) + noise[t]
+        paths = [np.ascontiguousarray(x[:, r]) for r in range(len(pending))]
+    for (key, inst, _), d, path in zip(pending, draws, paths):
+        out = _trace_finish(inst, minutes, path, d)
+        out.flags.writeable = False
+        _TRACE_CACHE[key] = out
+
+
+# Derived per-trace indices (float64 prefix dollar integrals for O(1)
+# billing, block maxima for acquire's crossing search) are pure functions of
+# the trace; replicas sharing a trace share them.  Keys are array identities
+# with the trace held in the value, so an id is never reused while cached.
+# Bounded FIFO: un-memoized traces (e.g. CSV replays) would otherwise pin
+# their indices for the process lifetime.
+_PREFIX_CACHE: Dict[int, tuple] = {}
+_BLOCKMAX_CACHE: Dict[int, tuple] = {}
+_INDEX_CACHE_MAX = 512     # entries per cache (~trace count, not bytes)
+
+
+def _cache_put(cache: Dict[int, tuple], key: int, val: tuple) -> None:
+    if len(cache) >= _INDEX_CACHE_MAX:
+        cache.pop(next(iter(cache)))     # FIFO evict (insertion-ordered)
+    cache[key] = val
+
+
+_CROSS_BLOCK = 512   # minutes per block of the acquire() crossing index
+
+
+def _shared_prefix(tr: np.ndarray) -> np.ndarray:
+    """P[i] = sum of the first i per-minute prices, float64."""
+    hit = _PREFIX_CACHE.get(id(tr))
+    if hit is not None and hit[0] is tr:
+        return hit[1]
+    p = np.concatenate([[0.0], np.cumsum(tr, dtype=np.float64)])
+    _cache_put(_PREFIX_CACHE, id(tr), (tr, p))
+    return p
+
+
+def _shared_blockmax(tr: np.ndarray) -> np.ndarray:
+    hit = _BLOCKMAX_CACHE.get(id(tr))
+    if hit is not None and hit[0] is tr:
+        return hit[1]
+    n_blocks = (len(tr) + _CROSS_BLOCK - 1) // _CROSS_BLOCK
+    pad = np.full(n_blocks * _CROSS_BLOCK, -np.inf, tr.dtype)
+    pad[: len(tr)] = tr
+    b = pad.reshape(n_blocks, _CROSS_BLOCK).max(axis=1)
+    _cache_put(_BLOCKMAX_CACHE, id(tr), (tr, b))
+    return b
+
+
+def clear_trace_caches() -> None:
+    """Drop the trace memo and derived indices (cold-start benchmarking)."""
+    _TRACE_CACHE.clear()
+    _PREFIX_CACHE.clear()
+    _BLOCKMAX_CACHE.clear()
 
 
 def load_csv_traces(text: str, pool: List[InstanceType], minutes: int):
@@ -173,9 +291,6 @@ class Allocation:
     released: bool = False
 
 
-_CROSS_BLOCK = 512   # minutes per block of the acquire() crossing index
-
-
 class SpotMarket:
     """Price oracle + allocation ledger + billing (with first-hour refund)."""
 
@@ -193,30 +308,14 @@ class SpotMarket:
         self.allocations: List[Allocation] = []
         self.billed = 0.0
         self.refunded = 0.0
-        # lazy per-trace indices: float64 prefix dollar integrals (O(1)
-        # billing) and block maxima (acquire's next-crossing search)
-        self._prefix: Dict[str, np.ndarray] = {}
-        self._blockmax: Dict[str, np.ndarray] = {}
 
+    # per-trace indices live in the module-level caches: replicas of the
+    # same market seed (trace memo hit) share one prefix/blockmax build
     def _price_prefix(self, name: str) -> np.ndarray:
-        """P[i] = sum of the first i per-minute prices, float64."""
-        p = self._prefix.get(name)
-        if p is None:
-            p = np.concatenate(
-                [[0.0], np.cumsum(self.traces[name], dtype=np.float64)])
-            self._prefix[name] = p
-        return p
+        return _shared_prefix(self.traces[name])
 
     def _block_max(self, name: str) -> np.ndarray:
-        b = self._blockmax.get(name)
-        if b is None:
-            tr = self.traces[name]
-            n_blocks = (len(tr) + _CROSS_BLOCK - 1) // _CROSS_BLOCK
-            pad = np.full(n_blocks * _CROSS_BLOCK, -np.inf, tr.dtype)
-            pad[: len(tr)] = tr
-            b = pad.reshape(n_blocks, _CROSS_BLOCK).max(axis=1)
-            self._blockmax[name] = b
-        return b
+        return _shared_blockmax(self.traces[name])
 
     def _first_crossing(self, name: str, start_i: int, max_price: float):
         """Smallest minute index >= start_i with price > max_price, else None.

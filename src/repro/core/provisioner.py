@@ -102,13 +102,15 @@ class Provisioner:
         self.delta_lo = delta_lo
         self.delta_hi = delta_hi
 
-    def best_instance(self, t: float, trial: TrialSpec,
-                      exclude: Optional[set] = None) -> Choice:
-        """Algorithm 1 getBestInst: argmin over the pool of Eq. 2.
+    def candidates(self, t: float, trial: TrialSpec,
+                   exclude: Optional[set] = None) -> list:
+        """Algorithm 1 line 4: one sampled maximum price per eligible market.
 
-        The bid draws keep the legacy per-candidate RNG order (excluded
-        markets consume no draw); the RevPred forward is batched over the
-        whole pool in one dispatch when the predictor supports it."""
+        This is the only RNG-consuming half of ``best_instance`` — the bid
+        draws keep the legacy per-candidate order (excluded markets consume
+        no draw), so a caller may draw candidates for several trials first
+        and batch the revocation predictions afterwards without disturbing
+        the replica's RNG stream."""
         cands = []
         for inst in self.market.pool:
             if exclude and inst.name in exclude:
@@ -120,12 +122,10 @@ class Provisioner:
                 inst.od_price / 0.33)
             cands.append((inst, max_price))
         assert cands, "empty pool"
-        predict_pool = getattr(self.revpred, "predict_pool", None)
-        if predict_pool is not None:
-            ps = predict_pool([inst for inst, _ in cands], t,
-                              [mp for _, mp in cands])
-        else:
-            ps = [self.revpred.predict(inst, t, mp) for inst, mp in cands]
+        return cands
+
+    def choose(self, t: float, trial: TrialSpec, cands, ps) -> Choice:
+        """Eq. 2 argmin over drawn candidates and their p(revoke) answers."""
         best: Optional[Choice] = None
         for (inst, max_price), p in zip(cands, ps):
             p = min(max(float(p), 0.0), 1.0)
@@ -139,6 +139,23 @@ class Provisioner:
             if best is None or key < best_key:
                 best, best_key = Choice(inst, max_price, p, s_cost), key
         return best
+
+    def predict_candidates(self, t: float, cands) -> list:
+        """p(revoke) per candidate — pool-batched when the predictor can."""
+        predict_pool = getattr(self.revpred, "predict_pool", None)
+        if predict_pool is not None:
+            return predict_pool([inst for inst, _ in cands], t,
+                                [mp for _, mp in cands])
+        return [self.revpred.predict(inst, t, mp) for inst, mp in cands]
+
+    def best_instance(self, t: float, trial: TrialSpec,
+                      exclude: Optional[set] = None) -> Choice:
+        """Algorithm 1 getBestInst: argmin over the pool of Eq. 2.
+
+        The RevPred forward is batched over the whole pool in one dispatch
+        when the predictor supports it."""
+        cands = self.candidates(t, trial, exclude)
+        return self.choose(t, trial, cands, self.predict_candidates(t, cands))
 
 
 class ZeroRevPred:

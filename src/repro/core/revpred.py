@@ -470,40 +470,155 @@ class RevPred:
         present = np.stack([pr for _, pr in samples])
         rows = np.array([stack["row"][inst.name] for _, inst, mp, _ in misses])
         params = jax.tree.map(lambda x: x[rows], stack["params"])
-        lg = _vmap_logits(stack["fn"])(
-            params, jnp.asarray(hist[:, None]), jnp.asarray(present[:, None]))
-        p = np.asarray(jax.nn.sigmoid(lg))[:, 0].astype(np.float64)
+        p = _stacked_forward(stack["fn"], params, hist, present)
         # Eq. 3 odds de-skew, elementwise with per-market pos_frac
-        pf = stack["pos_frac"][rows]
-        phi_p = np.maximum(pf, 1e-6)
-        phi_n = np.maximum(1.0 - pf, 1e-6)
-        odds = (p * phi_n) / np.maximum((1.0 - p) * phi_p, 1e-9)
-        p = np.where(stack["use_eq3"][rows], odds / (1.0 + odds), p)
+        p = _eq3_deskew(p, stack["pos_frac"][rows], stack["use_eq3"][rows])
         for (i, _, _, key), pi in zip(misses, p):
             out[i] = self._p_cache[key] = float(pi)
         return out
+
+
+def _stacked_forward(fn: Callable, params, hist: np.ndarray,
+                     present: np.ndarray) -> np.ndarray:
+    """One vmapped batch-1 forward per stacked-params row -> p, float64."""
+    lg = _vmap_logits(fn)(
+        params, jnp.asarray(hist[:, None]), jnp.asarray(present[:, None]))
+    return np.asarray(jax.nn.sigmoid(lg))[:, 0].astype(np.float64)
+
+
+def _eq3_deskew(p: np.ndarray, pos_frac: np.ndarray,
+                use_eq3: np.ndarray) -> np.ndarray:
+    """Vectorized Eq. 3 odds de-skew with per-row pos_frac, applied only
+    where ``use_eq3`` — the single implementation both the per-market and
+    the cross-replica batch paths share (their answers must stay
+    bit-identical)."""
+    phi_p = np.maximum(pos_frac, 1e-6)
+    phi_n = np.maximum(1.0 - pos_frac, 1e-6)
+    odds = (p * phi_n) / np.maximum((1.0 - p) * phi_p, 1e-9)
+    return np.where(use_eq3, odds / (1.0 + odds), p)
+
+
+def predict_pool_multi(requests) -> list:
+    """Revocation probabilities for many ``(revpred, insts, t, max_prices)``
+    requests — the sweep runtime's cross-replica batch point.
+
+    All cache misses of every ``RevPred`` request sharing one model
+    architecture are answered by a single stacked-params vmapped forward
+    (params stacked across *markets and replicas*); vmap keeps each row's
+    arithmetic independent of its batch neighbors, so the answers are
+    bit-identical to per-replica ``predict_pool`` calls.  Non-``RevPred``
+    predictors (oracle, zero, custom) fall back to their own path."""
+    out = [None] * len(requests)
+    mixed: Dict[int, list] = {}       # id(logit_fn) -> misses across requests
+    fns: Dict[int, Callable] = {}
+    for ri, (rp, insts, t, mps) in enumerate(requests):
+        if not isinstance(rp, RevPred):
+            pool = getattr(rp, "predict_pool", None)
+            out[ri] = (pool(insts, t, mps) if pool is not None else
+                       [rp.predict(inst, t, mp)
+                        for inst, mp in zip(insts, mps)])
+            continue
+        minute = int(t / MINUTE)
+        row = [None] * len(insts)
+        misses = []
+        for i, (inst, mp) in enumerate(zip(insts, mps)):
+            key = (inst.name, minute, round(mp, 5))
+            p = rp._p_cache.get(key)
+            if p is None:
+                misses.append((i, inst, mp, key))
+            else:
+                row[i] = p
+        out[ri] = row
+        if not misses:
+            continue
+        stack = rp._ensure_stack()
+        if stack is None:
+            for i, inst, mp, key in misses:
+                row[i] = rp.predict(inst, t, mp)
+            continue
+        # group by model fn AND per-market param shapes: only same-width
+        # stacks can share one concatenated forward
+        sig = tuple((leaf.shape[1:], str(leaf.dtype))
+                    for leaf in jax.tree.leaves(stack["params"]))
+        fid = (id(stack["fn"]), sig)
+        fns[fid] = stack["fn"]
+        mixed.setdefault(fid, []).append((ri, rp, stack, minute, misses))
+    for fid, group in mixed.items():
+        hists, presents, trees, pfs, eq3s = [], [], [], [], []
+        for ri, rp, stack, minute, misses in group:
+            rows = np.array([stack["row"][inst.name]
+                             for _, inst, _, _ in misses])
+            trees.append(jax.tree.map(lambda x: x[rows], stack["params"]))
+            for _, inst, mp, _ in misses:
+                h, pr = rp._sample(inst, minute, mp)
+                hists.append(h)
+                presents.append(pr)
+            pfs.append(stack["pos_frac"][rows])
+            eq3s.append(stack["use_eq3"][rows])
+        params = jax.tree.map(lambda *xs: jnp.concatenate(xs), *trees)
+        p = _stacked_forward(fns[fid], params, np.stack(hists),
+                             np.stack(presents))
+        p = _eq3_deskew(p, np.concatenate(pfs), np.concatenate(eq3s))
+        pos = 0
+        for ri, rp, stack, minute, misses in group:
+            for i, _, _, key in misses:
+                out[ri][i] = rp._p_cache[key] = float(p[pos])
+                pos += 1
+    return out
+
+
+def _sliding_max(arr: np.ndarray, w: int) -> np.ndarray:
+    """out[i] = max(arr[i:i+w]) in O(n): block prefix/suffix running maxima
+    (float max is exact and order-free, so this matches the windowed scan
+    bit-for-bit at a 60th of the work)."""
+    n = len(arr)
+    if n < w:
+        return np.empty(0, arr.dtype)
+    nout = n - w + 1
+    nb = (n + w - 1) // w
+    pad = np.full(nb * w, -np.inf, arr.dtype)
+    pad[:n] = arr
+    blocks = pad.reshape(nb, w)
+    suff = np.maximum.accumulate(blocks[:, ::-1], axis=1)[:, ::-1].ravel()
+    pref = np.maximum.accumulate(blocks, axis=1).ravel()
+    return np.maximum(suff[:nout], pref[w - 1:w - 1 + nout])
+
+
+# rolling next-hour maxima keyed by trace identity: every oracle over the
+# same (memoized, frozen) trace shares one build — a sweep's replicas pay
+# the index once per market seed instead of once per replica.  Bounded FIFO
+# so un-memoized traces (CSV replays) don't pin entries forever.
+_FUT_MAX_CACHE: Dict[int, tuple] = {}
+_FUT_MAX_CACHE_MAX = 512
+
+
+def clear_prediction_caches() -> None:
+    """Drop shared prediction indices (cold-start benchmarking)."""
+    _FUT_MAX_CACHE.clear()
 
 
 class OracleRevPred:
     """Upper-bound predictor that reads the future from the simulator —
     used in ablations to bound how much predictor quality can matter.
 
-    Lazily caches each market's rolling next-hour price maximum, so a
-    prediction is one float comparison instead of a 60-minute scan (the
-    oracle sits on the fig7–9 deployment hot path)."""
+    Caches each market's rolling next-hour price maximum (shared across
+    replicas of the same trace), so a prediction is one float comparison
+    instead of a 60-minute scan (the oracle sits on the fig7–9 deployment
+    hot path)."""
 
     def __init__(self, market: SpotMarket):
         self.market = market
-        self._fut_max: Dict[str, np.ndarray] = {}
 
     def _future_max(self, name: str) -> np.ndarray:
-        fm = self._fut_max.get(name)
-        if fm is None:
-            trace = self.market.traces[name]
-            # fm[t] = max(trace[t+1 : t+61]) for every full next-hour window
-            fm = np.lib.stride_tricks.sliding_window_view(
-                trace, 60)[1:].max(axis=1)
-            self._fut_max[name] = fm
+        trace = self.market.traces[name]
+        hit = _FUT_MAX_CACHE.get(id(trace))
+        if hit is not None and hit[0] is trace:
+            return hit[1]
+        # fm[t] = max(trace[t+1 : t+61]) for every full next-hour window
+        fm = _sliding_max(trace, 60)[1:]
+        if len(_FUT_MAX_CACHE) >= _FUT_MAX_CACHE_MAX:
+            _FUT_MAX_CACHE.pop(next(iter(_FUT_MAX_CACHE)))
+        _FUT_MAX_CACHE[id(trace)] = (trace, fm)
         return fm
 
     def predict(self, inst: InstanceType, t: float, max_price: float) -> float:

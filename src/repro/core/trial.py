@@ -143,6 +143,14 @@ _BASE_CACHE: Dict[tuple, float] = {}
 _CURVE_CACHE: Dict[tuple, tuple] = {}
 
 
+def clear_sim_caches() -> None:
+    """Drop the process-wide simulation memos (cold-start benchmarking).
+    Per-backend caches die with their SimTrialBackend instances."""
+    _JITTER_CACHE.clear()
+    _BASE_CACHE.clear()
+    _CURVE_CACHE.clear()
+
+
 def _spec_key(trial: TrialSpec) -> tuple:
     return (trial.workload, tuple(sorted(trial.hp.items())), trial.idx)
 
@@ -297,6 +305,18 @@ class SimTrialBackend:
             lst = self._curve_list_cache[trial.key]
         grid_idx = min(step // w.val_every, len(lst)) - 1
         return lst[grid_idx]
+
+    def metric_range(self, trial: TrialSpec, lo: int, hi: int) -> list:
+        """``metric_at(trial, k * val_every)`` for grid indices lo..hi
+        (lo >= 1) as one slice — the engine's metric-preview bulk read."""
+        lst = self._curve_list_cache.get(trial.key)
+        if lst is None:
+            self.curve(trial)
+            lst = self._curve_list_cache[trial.key]
+        n = len(lst)
+        if hi <= n:
+            return lst[lo - 1:hi]
+        return [lst[min(k, n) - 1] for k in range(lo, hi + 1)]
 
     def true_final(self, trial: TrialSpec) -> float:
         return float(self.curve(trial)[-1])

@@ -1,0 +1,17 @@
+"""Batched multi-replica scenario runtime (sweeps over market randomness).
+
+spec     ScenarioSpec (one replica: seed x workload x policy x θ) + the
+         cartesian ``scenario_grid`` builder and replica factories
+runner   SweepRunner: concurrent generator-driven execution with
+         cross-replica batched RevPred forwards and EarlyCurve fits, plus
+         the sequential naive-loop baseline
+result   SweepResult / Summary: per-replica records, mean ± 95% CI
+         aggregation over any spec axes, JSON/CSV/markdown exports
+"""
+
+from repro.sweep.result import (ReplicaResult, Summary, SweepResult,  # noqa: F401
+                                markdown_table, summarize)
+from repro.sweep.runner import SweepRunner, clear_shared_caches  # noqa: F401
+from repro.sweep.spec import (ScenarioSpec, build_replica,  # noqa: F401
+                              build_revpred, build_scheduler, build_searcher,
+                              scenario_grid)

@@ -1,0 +1,147 @@
+"""Scenario specifications for batched multi-replica sweeps.
+
+A ``ScenarioSpec`` names one independent tuning-run replica — market seed x
+workload x scheduler/searcher x θ x engine knobs — as a frozen, hashable,
+JSON-able value.  ``scenario_grid`` builds the cartesian grid the sweep
+runtime executes; ``build_replica`` materializes one spec into a runnable
+``Tuner`` (the runner injects shared markets/predictors/backends so that
+replicas pay for trace synthesis, market indices, and predictor training
+once per market seed instead of once per replica).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Union
+
+from repro.core.market import SpotMarket
+from repro.core.provisioner import ZeroRevPred
+from repro.core.revpred import OracleRevPred, RevPred
+from repro.core.trial import WORKLOADS, SimTrialBackend, Workload
+from repro.tuner import (AdaptiveGridSearcher, AdaptiveSpotTuneScheduler,
+                         ASHAScheduler, GridSearcher, RandomSearcher,
+                         Scheduler, Searcher, SpotTuneScheduler, Tuner,
+                         build_engine)
+
+_WORKLOADS_BY_NAME: Dict[str, Workload] = {w.name: w for w in WORKLOADS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One replica of a sweep: everything needed to reproduce a tuning run."""
+
+    workload: str                        # Table-II workload name
+    market_seed: int
+    scheduler: str = "spottune"          # spottune | asha | adaptive | base
+    theta: float = 0.7
+    mcnt: int = 3
+    eta: int = 3
+    searcher: str = "grid"               # grid | random | adaptive
+    num_samples: Optional[int] = None    # random searcher sample count
+    initial_trials: Optional[int] = None
+    revpred: str = "oracle"              # oracle | zero | revpred | tributary | logreg
+    engine_seed: int = 0
+    days: float = 12.0
+    straggler_factor: float = 0.0
+    n_trials: Optional[int] = None       # truncate the suggestion stream
+    tag: str = ""                        # free-form grouping label
+
+    def workload_obj(self) -> Workload:
+        return _WORKLOADS_BY_NAME[self.workload]
+
+    def market_key(self) -> tuple:
+        """Replicas agreeing on this key can share one trace set."""
+        return (self.days, self.market_seed)
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def scenario_grid(workloads: Union[str, Iterable[str]],
+                  market_seeds: Iterable[int],
+                  **axes) -> List[ScenarioSpec]:
+    """Cartesian ScenarioSpec grid.
+
+    ``workloads`` and ``market_seeds`` are required axes; any other
+    ``ScenarioSpec`` field passed as a list/tuple becomes an axis, scalars
+    are broadcast.  Example::
+
+        scenario_grid(["LoR", "SVM"], range(20), theta=[0.3, 0.7, 1.0])
+    """
+    if isinstance(workloads, str):
+        workloads = [workloads]
+    axis_names, axis_vals = [], []
+    for name, val in axes.items():
+        if isinstance(val, (list, tuple, range)):
+            axis_names.append(name)
+            axis_vals.append(list(val))
+        else:
+            axis_names.append(name)
+            axis_vals.append([val])
+    specs = []
+    for w in workloads:
+        for seed in market_seeds:
+            for combo in itertools.product(*axis_vals) if axis_vals else [()]:
+                specs.append(ScenarioSpec(
+                    workload=w, market_seed=seed,
+                    **dict(zip(axis_names, combo))))
+    return specs
+
+
+def build_scheduler(spec: ScenarioSpec) -> Scheduler:
+    if spec.scheduler == "spottune":
+        return SpotTuneScheduler(theta=spec.theta, mcnt=spec.mcnt,
+                                 seed=spec.engine_seed)
+    if spec.scheduler == "adaptive":
+        return AdaptiveSpotTuneScheduler(theta=spec.theta, mcnt=spec.mcnt,
+                                         seed=spec.engine_seed)
+    if spec.scheduler == "asha":
+        return ASHAScheduler(eta=spec.eta)
+    if spec.scheduler == "base":
+        return Scheduler()
+    raise ValueError(f"unknown scheduler {spec.scheduler!r}")
+
+
+def build_searcher(spec: ScenarioSpec) -> Searcher:
+    w = spec.workload_obj()
+    if spec.searcher == "grid":
+        s = GridSearcher(w)
+    elif spec.searcher == "random":
+        s = RandomSearcher(w, num_samples=spec.num_samples,
+                           seed=spec.engine_seed)
+    elif spec.searcher == "adaptive":
+        s = AdaptiveGridSearcher(w, seed=spec.engine_seed)
+    else:
+        raise ValueError(f"unknown searcher {spec.searcher!r}")
+    if spec.n_trials is not None:
+        if not hasattr(s, "_pending"):
+            # an adaptive searcher keeps refining past any prefix — a silent
+            # no-op here would mislabel every exported replica record
+            raise ValueError(
+                f"n_trials is not supported with searcher={spec.searcher!r}")
+        s._pending = s._pending[: spec.n_trials]
+    return s
+
+
+def build_revpred(spec: ScenarioSpec, market: SpotMarket,
+                  train_minutes: int = 2880, epochs: int = 4,
+                  stride: int = 5):
+    if spec.revpred == "oracle":
+        return OracleRevPred(market)
+    if spec.revpred == "zero":
+        return ZeroRevPred()
+    if spec.revpred in ("revpred", "tributary", "logreg"):
+        return RevPred.train(market, train_minutes=train_minutes,
+                             kind=spec.revpred, epochs=epochs,
+                             seed=spec.engine_seed, stride=stride)
+    raise ValueError(f"unknown revpred {spec.revpred!r}")
+
+
+def build_replica(spec: ScenarioSpec, market: SpotMarket,
+                  backend: SimTrialBackend, revpred) -> Tuner:
+    """Spec + (possibly shared) market/backend/predictor -> runnable Tuner."""
+    engine = build_engine(market, backend, revpred, seed=spec.engine_seed,
+                          straggler_factor=spec.straggler_factor)
+    return Tuner(engine, build_scheduler(spec), build_searcher(spec),
+                 initial_trials=spec.initial_trials)

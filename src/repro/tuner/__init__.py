@@ -9,15 +9,18 @@ spottune    the paper's theta + EarlyCurve top-mcnt policy as a Scheduler
 tuner       Tuner facade + RunResult
 """
 
-from repro.tuner.engine import (EngineConfig, ExecutionEngine, Status,  # noqa: F401
-                                TrialState, build_engine)
+from repro.tuner.engine import (EngineConfig, ExecutionEngine,  # noqa: F401
+                                ProvisionBatch, Status, TrialState,
+                                build_engine)
 from repro.tuner.events import (HourRotation, MetricReported,  # noqa: F401
                                 RevocationNotice, TrialEvent, TrialFinished,
                                 TrialRevoked, TrialStarted)
 from repro.tuner.scheduler import (CONTINUE, PAUSE, PROMOTE, STOP,  # noqa: F401
                                    Decision, DecisionKind, Scheduler, Searcher,
                                    TrialView)
-from repro.tuner.searchers import (ASHAScheduler, GridSearcher,  # noqa: F401
-                                   ListSearcher, RandomSearcher)
-from repro.tuner.spottune import SpotTuneScheduler  # noqa: F401
-from repro.tuner.tuner import RunResult, Tuner  # noqa: F401
+from repro.tuner.searchers import (AdaptiveGridSearcher,  # noqa: F401
+                                   ASHAScheduler, GridSearcher, ListSearcher,
+                                   RandomSearcher)
+from repro.tuner.spottune import (AdaptiveSpotTuneScheduler,  # noqa: F401
+                                  SpotTuneScheduler)
+from repro.tuner.tuner import FitRequest, RunResult, Tuner  # noqa: F401

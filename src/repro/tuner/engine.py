@@ -32,9 +32,18 @@ updates consume noise draws that are deterministic in ``(workload.seed,
 int(t))``.  The event-driven fast path therefore jumps simulated time straight
 to the earliest boundary (snapped to the tick grid) and replays the skipped
 ticks as one vectorized fold (``_advance_window``), which is exactly
-equivalent to ticking through them.  ``EngineConfig(exact_ticks=True)`` keeps
-the legacy tick-for-tick loop; ``repro.tuner.equivalence`` pins fast == exact
-(billing, finish times, metric histories) across seeds.
+equivalent to ticking through them.  Schedulers that implement
+``preview_metrics`` let the jump clear non-actionable metric crossings too
+(``_preview_boundary``), and straggler mode jumps to the predicted
+perf-matrix crossing (``_straggler_boundary``) instead of stepping every
+tick.  ``EngineConfig(exact_ticks=True)`` keeps the legacy tick-for-tick
+loop; ``repro.tuner.equivalence`` pins fast == exact (billing, finish
+times, metric histories) across seeds.
+
+``run_cooperative`` is the generator form of the loop: it suspends at each
+deploy point with a ``ProvisionBatch`` whose candidate bids are already
+drawn, so a sweep runner can interleave many engines and answer their
+revocation predictions in one cross-replica vmapped forward.
 """
 
 from __future__ import annotations
@@ -46,6 +55,8 @@ import itertools
 import math
 import os
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.market import HOUR, Allocation, SpotMarket
 from repro.core.provisioner import Choice, PerfModel, Provisioner
@@ -124,10 +135,37 @@ def build_engine(market: SpotMarket, backend: SimTrialBackend, revpred,
                  seed: int = 0, **engine_kw) -> "ExecutionEngine":
     """Standard construction: fresh perf matrix + Eq.-2 provisioner around a
     market/backend pair.  Every driver (examples, benchmarks, tests, the
-    legacy shim) wants exactly this wiring."""
+    legacy shim) wants exactly this wiring.  An engine is cheap to build —
+    all heavyweight state (traces, indices, curves, jit caches) lives in
+    shared pure memos — and fully replica-local: the only RNG it consumes
+    is the provisioner's own seeded stream."""
     prov = Provisioner(market, revpred, PerfModel(market.pool), seed=seed)
     return ExecutionEngine(market, backend, prov,
                            EngineConfig(seed=seed, **engine_kw))
+
+
+@dataclasses.dataclass
+class ProvisionBatch:
+    """A suspended deploy point of ``ExecutionEngine.run_cooperative``.
+
+    ``items`` holds ``(trial_state, candidates)`` for every trial deploying
+    at this tick, candidate bids already drawn (RNG order is fixed before
+    the suspension).  The driver must fill ``responses`` — one p(revoke)
+    list per item, aligned with its candidates — before resuming the
+    generator; ``service_local`` answers with the engine's own predictor,
+    reproducing the non-cooperative path bit-for-bit.  A sweep runner
+    instead stacks the candidates of many suspended replicas into one
+    vmapped RevPred forward."""
+
+    engine: "ExecutionEngine"
+    t: float
+    items: List[tuple]
+    responses: Optional[List[list]] = None
+
+    def service_local(self) -> None:
+        prov = self.engine.prov
+        self.responses = [prov.predict_candidates(self.t, cands)
+                          for _, cands in self.items]
 
 
 class ExecutionEngine:
@@ -141,6 +179,7 @@ class ExecutionEngine:
         self.cfg = config or EngineConfig()
         self.scheduler: Scheduler = Scheduler()
         self._drain_promos = False
+        self._has_preview = False
         self.states: List[TrialState] = []
         self._by_key: Dict[str, TrialState] = {}
         self._active: List[TrialState] = []
@@ -159,6 +198,10 @@ class ExecutionEngine:
         # not overridden) skip the per-event promotion drain entirely
         self._drain_promos = (type(scheduler).take_promotions
                               is not Scheduler.take_promotions)
+        # schedulers that can preview metric trajectories let the fast path
+        # jump over non-actionable crossings instead of visiting each one
+        self._has_preview = (type(scheduler).preview_metrics
+                             is not Scheduler.preview_metrics)
 
     def add_trial(self, spec: TrialSpec, target_steps: float) -> TrialState:
         assert spec.key not in self._by_key, f"duplicate trial key {spec.key}"
@@ -200,8 +243,8 @@ class ExecutionEngine:
         st.notice_handled = False
         return rec
 
-    def _deploy(self, st: TrialState):
-        choice = self.prov.best_instance(self.t, st.spec, exclude=st.exclude or None)
+    def _deploy_chosen(self, st: TrialState, choice: Choice):
+        """Complete a deployment whose Eq.-2 choice is already made."""
         st.exclude = set()
         alloc = self.market.acquire(choice.inst, choice.max_price, self.t)
         st.alloc = alloc
@@ -246,7 +289,15 @@ class ExecutionEngine:
     def _advance_window(self, st: TrialState) -> List[tuple]:
         """Fast-path advance: replay every skipped tick in ``(st._last_t,
         self.t]`` at once — one fused steps update, one vectorized EWMA fold
-        over the deterministic noise draws, the same metric-crossing scan."""
+        over the deterministic noise draws, the same metric-crossing scan.
+
+        Every crossed metric point is appended to the trial's history, but
+        only the points the exact loop would first observe at the *final*
+        tick of the window are returned for dispatch.  Without a previewing
+        scheduler the two sets coincide (each crossing is its own boundary);
+        with one, the interior points are exactly those the scheduler
+        previewed as non-actionable — appending them silently is the whole
+        point of the jump."""
         tick_s = self.cfg.tick_s
         t = self.t
         start = st.ready_at if st.ready_at > st._last_t else st._last_t
@@ -256,10 +307,15 @@ class ExecutionEngine:
         if k1 < k0:
             return []                             # still inside deploy/restore
         inst = st.alloc.inst
-        st.steps = min(st.steps + (t - start) / st._spt, st.target_steps)
+        steps0 = st.steps
+        st.steps = min(steps0 + (t - start) / st._spt, st.target_steps)
         obs = self.backend.noisy_step_times(st.spec, inst, k0, k1, tick_s,
                                             base=st._spt)
         self.prov.perf.update_many(inst, st.spec, obs)
+        # steps as of the previous tick — what an every-tick scan had seen
+        lim = (k1 - 1) * tick_s
+        s_prev = steps0 if lim <= start else min(
+            steps0 + (lim - start) / st._spt, st.target_steps)
         # metric points crossed (identical to the per-tick scan)
         w = st.spec.workload
         new_points = []
@@ -270,7 +326,8 @@ class ExecutionEngine:
             if val is not None:
                 st.metrics_steps.append(step)
                 st.metrics_vals.append(val)
-                new_points.append((step, val))
+                if step > s_prev:
+                    new_points.append((step, val))
         return new_points
 
     # ------------------------------------------------------------ decisions
@@ -314,6 +371,19 @@ class ExecutionEngine:
         ``exact_ticks=True`` visits every ``tick_s`` of simulated time (the
         legacy Algorithm 1 SLEEP loop); the default fast path processes the
         same ticks a boundary falls on and jumps over the rest."""
+        for req in self.run_cooperative():
+            req.service_local()
+
+    def run_cooperative(self):
+        """Generator form of ``run_until_idle``: suspends at every deploy
+        point with a ``ProvisionBatch`` the driver must answer before
+        resuming.  This is what makes one engine step-interleavable with
+        others — a sweep runner drives many replicas' generators and
+        services their suspended deploys in one cross-replica batch.
+        Serviced locally (``run_until_idle``) it is bit-identical to the
+        pre-generator loop: candidate RNG draws happen before suspension in
+        trial order, and deployments complete in the same order at the same
+        tick."""
         cfg = self.cfg
         exact = cfg.exact_ticks
         while True:
@@ -324,14 +394,27 @@ class ExecutionEngine:
             if self.t > cfg.max_sim_s or self.t >= self.market.horizon_s() - HOUR:
                 raise RuntimeError("simulation horizon exhausted")
             touched = self._tick(runnable, exact)
+            waiting = [s for s in runnable if s.status == Status.WAITING]
+            if waiting:
+                batch = ProvisionBatch(self, self.t, [
+                    (st, self.prov.candidates(self.t, st.spec,
+                                              exclude=st.exclude or None))
+                    for st in waiting])
+                yield batch
+                assert batch.responses is not None, "unserviced ProvisionBatch"
+                for (st, cands), ps in zip(batch.items, batch.responses):
+                    choice = self.prov.choose(self.t, st.spec, cands, ps)
+                    self._deploy_chosen(st, choice)
+                    touched.append(st)
             self.t = self.t + cfg.tick_s if exact else self._next_tick(touched)
 
     def _tick(self, runnable: List[TrialState], exact: bool) -> List[TrialState]:
-        """One Algorithm-1 pass at ``self.t``: advance every running trial,
-        apply the notice/revoke/finish/pause/rotate/straggler chain, deploy
-        waiting trials at tick end.  Kept verbatim from the paper's loop —
-        the two advance flavors are equivalence-pinned.  Returns the trials
-        whose boundaries moved (advanced or redeployed) for rescheduling."""
+        """One Algorithm-1 pass at ``self.t``: advance every running trial
+        and apply the notice/revoke/finish/pause/rotate/straggler chain.
+        Kept verbatim from the paper's loop — the two advance flavors are
+        equivalence-pinned.  Waiting trials deploy at tick end, in the main
+        loop (the deploy is the cooperative suspension point).  Returns the
+        trials whose boundaries moved for rescheduling."""
         cfg = self.cfg
         k_now = round(self.t / cfg.tick_s)
         touched: List[TrialState] = []
@@ -417,32 +500,29 @@ class ExecutionEngine:
                     st.status = Status.WAITING
                     self.events.append((self.t, "straggler", st.spec.key))
                     continue
-
-        for st in runnable:
-            if st.status == Status.WAITING:
-                self._deploy(st)
-                touched.append(st)
         return touched
 
     def _next_tick(self, touched: List[TrialState]) -> float:
         """Earliest grid tick > ``self.t`` at which anything can happen.
 
         Per running trial the candidate boundaries are: the revocation notice,
-        the revocation itself, the 1-hour rotation, the next ``val_every``
-        metric crossing, and reaching ``target_steps`` (compute progresses at
-        the deterministic noise-free step time measured from the trial's last
-        replayed tick, so both step boundaries are closed-form).  Boundaries
-        are recomputed only for trials this tick touched and kept in a lazily
-        invalidated min-heap, so a jump costs O(touched) instead of
-        O(active).  Trials promoted mid-tick deploy at the next tick, like
-        the legacy loop; straggler mitigation compares the live perf matrix
-        every tick, so it forces single-tick stepping.  The jump never
-        overshoots the horizon guards the main loop raises on."""
+        the revocation itself, the 1-hour rotation, reaching ``target_steps``
+        (compute progresses at the deterministic noise-free step time measured
+        from the trial's last replayed tick, so step boundaries are
+        closed-form), metric crossings, and — in straggler mode — the first
+        tick the perf-matrix comparison can fire (predicted by replaying the
+        EWMA fold ahead, see ``_straggler_boundary``).  A previewing
+        scheduler turns "every metric crossing" into "the first crossing it
+        would act on" (``_preview_boundary``); without a preview each
+        crossing stays its own boundary.  Boundaries are recomputed only for
+        trials this tick touched and kept in a lazily invalidated min-heap,
+        so a jump costs O(touched) instead of O(active).  Trials promoted
+        mid-tick deploy at the next tick, like the legacy loop.  The jump
+        never overshoots the horizon guards the main loop raises on."""
         cfg = self.cfg
         tick_s = cfg.tick_s
         k_now = round(self.t / tick_s)
-        if cfg.straggler_factor > 1.0:
-            return (k_now + 1) * tick_s
+        straggler = cfg.straggler_factor > 1.0
         heap = self._heap
         for st in touched:
             if st.status != Status.RUNNING:
@@ -459,17 +539,26 @@ class ExecutionEngine:
             b = start + (st.target_steps - st.steps) * spt    # finish
             if b < cand:
                 cand = b
-            w = st.spec.workload
-            nstep = (st._next_val + 1) * w.val_every
-            if nstep <= st.target_steps:                  # next metric point
-                b = start + (nstep - st.steps) * spt
-                if b < cand:
-                    cand = b
+            if not self._has_preview:
+                w = st.spec.workload
+                nstep = (st._next_val + 1) * w.val_every
+                if nstep <= st.target_steps:              # next metric point
+                    b = start + (nstep - st.steps) * spt
+                    if b < cand:
+                        cand = b
             # snap up to the grid; the 1e-7 slack only ever lands us one tick
             # early, where the (unchanged) condition chain simply re-arms
             k = math.ceil(cand / tick_s - 1e-7)
             if k <= k_now:
                 k = k_now + 1
+            if self._has_preview:
+                k_act = self._preview_boundary(st, start, spt, k_now, k)
+                if k_act is not None and k_act < k:
+                    k = k_act
+            if straggler:
+                k_strag = self._straggler_boundary(st, start, k_now, k)
+                if k_strag is not None and k_strag < k:
+                    k = k_strag
             st._next_k = k
             heapq.heappush(heap, (k, next(self._seq), st))
         if self._pending_deploy:
@@ -490,3 +579,89 @@ class ExecutionEngine:
         if k > k_guard:
             k = k_guard if k_guard > k_now else k_now + 1
         return k * tick_s
+
+    def _preview_boundary(self, st: TrialState, start: float, spt: float,
+                          k_now: int, k_limit: int) -> Optional[int]:
+        """First tick <= ``k_limit`` at which the scheduler would act on a
+        metric crossing, per its ``preview_metrics`` answer; None = none.
+
+        The crossings that would occur through the end of tick ``k_limit``
+        are materialized (step, value, observation tick) and handed to the
+        scheduler; points it declares non-actionable are later appended
+        silently by ``_advance_window`` without a boundary visit."""
+        w = st.spec.workload
+        tick_s = self.cfg.tick_s
+        lo = st._next_val + 1
+        steps_end = st.steps + (k_limit * tick_s - start) / spt
+        if steps_end > st.target_steps:
+            steps_end = st.target_steps
+        hi = int(steps_end // w.val_every)
+        if hi < lo:
+            return None
+        steps_f = np.arange(lo, hi + 1, dtype=np.int64) * w.val_every
+        metric_range = getattr(self.backend, "metric_range", None)
+        if metric_range is not None:
+            vals_f = metric_range(st.spec, lo, hi)
+        else:
+            vals_f = [self.backend.metric_at(st.spec, int(s)) for s in steps_f]
+        if any(v is None for v in vals_f):
+            # unreported points never reach the scheduler on any path
+            keep = [i for i, v in enumerate(vals_f) if v is not None]
+            if not keep:
+                return None
+            steps_f = steps_f[keep]
+            vals_f = [vals_f[i] for i in keep]
+        # observation tick per point: same snap (and slack) as the boundary
+        # grid, so the chosen tick is exactly where the crossing dispatches
+        ticks_f = np.ceil(
+            (start + (steps_f - st.steps) * spt) / tick_s - 1e-7).astype(np.int64)
+        np.clip(ticks_f, k_now + 1, None, out=ticks_f)
+        i = self.scheduler.preview_metrics(st, steps_f, vals_f, ticks_f)
+        if i is None:
+            return None
+        return int(ticks_f[int(i)])
+
+    def _straggler_boundary(self, st: TrialState, start: float, k_now: int,
+                            k_limit: int) -> Optional[int]:
+        """First tick <= ``k_limit`` at which the straggler re-placement can
+        fire, or None.  The comparison ``obs > f * min(M[:, trial])`` only
+        moves through this trial's own EWMA entry — other pool entries are
+        frozen while it runs here — and the upcoming observations are the
+        deterministic jitter draws, so the fold is replayed ahead (same
+        arithmetic as ``PerfModel.update_many``) to find the crossing tick
+        instead of forcing single-tick stepping."""
+        cfg = self.cfg
+        tick_s = cfg.tick_s
+        a = st.alloc
+        inst = a.inst
+        obs = self.backend.step_time(st.spec, inst)
+        k_elig = math.ceil((st.ready_at + 60) / tick_s - 1e-7)
+        if k_elig <= k_now:
+            k_elig = k_now + 1
+        if k_elig > k_limit:
+            return None
+        perf = self.prov.perf
+        other_min = math.inf
+        for i in self.market.pool:
+            if i.name != inst.name:
+                m_i = perf.get(i, st.spec)
+                if m_i < other_min:
+                    other_min = m_i
+        f = cfg.straggler_factor
+        m = perf.get(inst, st.spec)
+        first = not perf.observed(inst, st.spec)
+        k0 = math.floor(start / tick_s) + 1       # first tick that updates M
+        vals = None
+        if k0 <= k_limit:
+            vals = self.backend.noisy_step_times(st.spec, inst, k0, k_limit,
+                                                 tick_s, base=st._spt)
+        a_e = perf.ewma
+        b_e = 1 - a_e
+        for k in range(k_now + 1, k_limit + 1):
+            if k >= k0:
+                o = vals[k - k0]
+                m = o if first else b_e * m + a_e * o
+                first = False
+            if k >= k_elig and obs > f * (other_min if other_min < m else m):
+                return k
+        return None

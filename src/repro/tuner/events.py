@@ -17,6 +17,12 @@ Every event carries the simulation time ``t`` (seconds) and the ``trial`` key
                     handler for step k sees a ``view.metrics_vals`` that may
                     already include later points from the same tick — decide
                     on the view's full history, not on "history up to k".
+                    With a scheduler that implements ``preview_metrics``,
+                    points it previewed as inert are appended to the history
+                    *silently* (no event) — only the first actionable point
+                    and its same-tick companions dispatch.  Schedulers must
+                    therefore not rely on seeing every crossing; the history
+                    on the view is always complete.
   RevocationNotice  the market delivered the advance notice; the engine has
                     already checkpointed (the paper's l.24-26 reaction)
   TrialRevoked      the revocation fired; the trial rolled back to its

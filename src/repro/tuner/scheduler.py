@@ -102,6 +102,30 @@ class Scheduler:
           resume paused/finished trials with a new budget; an empty dict ends
           the tuning run.  Order is the (re)deployment order — it matters for
           reproducibility because provisioning consumes seeded RNG draws.
+      preview_metrics(view, steps, vals, ticks) -> index | None
+          Optional fast-path contract: given the metric points a running
+          trial will cross before its next lifecycle boundary (arrays of
+          step, value, and the tick each would be observed at), return the
+          index of the first point whose ``on_event`` would do anything
+          other than a side-effect-free CONTINUE — or None if every point
+          is inert.  A scheduler that implements this promises the engine
+          may *silently* append the inert points to the trial's history
+          without dispatching ``MetricReported`` for them; the flagged
+          point (and its same-tick companions) still dispatches normally.
+          Must be pure: the engine may re-preview overlapping windows.
+      request_suggestions(views) -> int
+          Consulted at every engine idle, before promotions: how many fresh
+          searcher suggestions to admit (0 = none).  Enables unbounded /
+          adaptive search without draining the searcher up front.
+      suggestions_added(n)
+          Follow-up to a non-zero request: how many trials the searcher
+          actually produced (0 = it is exhausted).
+      idle_fit_jobs(views) -> [(steps, vals, target_step), ...] | None
+          Optional sweep batching hook: the curve-fit workload the next
+          ``on_idle`` needs, exposed so a sweep runner can stack the fits of
+          many replicas into one dispatch.  ``run_idle_fits(jobs)`` must
+          compute them locally; ``set_idle_fits(preds)`` hands results back
+          (in job order) before ``on_idle`` is called.
       predictions(views) -> {key: predicted_final_metric}
       rank(views) -> [key, ...]   best first (lower metric = better)
     """
@@ -117,6 +141,24 @@ class Scheduler:
 
     def on_idle(self, views: Sequence) -> Dict[str, float]:
         return {}
+
+    def preview_metrics(self, view, steps, vals, ticks) -> Optional[int]:
+        return None          # base = no preview capability (conservative)
+
+    def request_suggestions(self, views: Sequence) -> int:
+        return 0
+
+    def suggestions_added(self, n: int) -> None:
+        pass
+
+    def idle_fit_jobs(self, views: Sequence) -> Optional[list]:
+        return None
+
+    def run_idle_fits(self, jobs: list) -> list:
+        raise NotImplementedError
+
+    def set_idle_fits(self, preds: list) -> None:
+        pass
 
     def predictions(self, views: Sequence) -> Dict[str, float]:
         return {v.key: (v.metrics_vals[-1] if v.metrics_vals else 1e9)

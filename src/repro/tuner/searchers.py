@@ -54,15 +54,82 @@ class GridSearcher(ListSearcher):
 
 
 class RandomSearcher(ListSearcher):
-    """Uniform sample of ``num_samples`` distinct grid points."""
+    """Uniform sample of ``num_samples`` distinct grid points.
 
-    def __init__(self, workload: Workload, num_samples: int, seed: int = 0):
+    ``num_samples=None`` streams the whole grid in random order — with the
+    Tuner's ``initial_trials`` cap this is the unbounded-search mode: the
+    searcher is consulted incrementally at idle instead of drained up
+    front."""
+
+    def __init__(self, workload: Workload, num_samples: Optional[int] = None,
+                 seed: int = 0):
         grid = workload.hp_grid()
         rng = np.random.default_rng(seed)
+        if num_samples is None:
+            idx = rng.permutation(len(grid))
+            super().__init__(
+                [TrialSpec(workload, grid[int(i)], int(i)) for i in idx])
+            return
         idx = rng.choice(len(grid), size=min(num_samples, len(grid)),
                          replace=False)
         super().__init__(
             [TrialSpec(workload, grid[int(i)], int(i)) for i in sorted(idx)])
+
+
+class AdaptiveGridSearcher(Searcher):
+    """Model-based searcher: ``Searcher.on_result`` feedback narrows the
+    grid around the best configurations seen so far.
+
+    Starts from a random subset of the HP grid; each refinement wave ranks
+    the unexplored grid points by Hamming distance to the ``top_k`` best
+    observed configs (successive halving of the search volume) and proposes
+    the ``batch`` closest.  Exhausts to None once nothing is left, or once
+    refinement is impossible because no results arrived."""
+
+    live_results = True      # Tuner feeds finished-trial metrics mid-run
+
+    def __init__(self, workload: Workload, initial: int = 6, batch: int = 4,
+                 top_k: int = 2, max_waves: int = 2, seed: int = 0):
+        self.workload = workload
+        self.grid = workload.hp_grid()
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(len(self.grid))
+        self._queue: List[int] = [int(i) for i in order[:initial]]
+        self._suggested = set(self._queue)
+        self._results: Dict[int, float] = {}
+        self.batch = batch
+        self.top_k = top_k
+        self._waves_left = max_waves
+
+    def suggest(self) -> Optional[TrialSpec]:
+        if not self._queue:
+            self._refine()
+        if not self._queue:
+            return None
+        i = self._queue.pop(0)
+        return TrialSpec(self.workload, self.grid[i], i)
+
+    def on_result(self, key: str, metric: Optional[float]) -> None:
+        if metric is None:
+            return
+        idx = int(key.rsplit("/hp", 1)[1])
+        self._results[idx] = metric
+
+    def _refine(self) -> None:
+        if not self._results or self._waves_left <= 0:
+            return
+        self._waves_left -= 1
+        best = sorted(self._results, key=self._results.get)[: self.top_k]
+        cands = []
+        for i, hp in enumerate(self.grid):
+            if i in self._suggested:
+                continue
+            d = min(sum(hp[k] != self.grid[b][k] for k in hp) for b in best)
+            cands.append((d, i))
+        cands.sort()
+        for _, i in cands[: self.batch]:
+            self._queue.append(i)
+            self._suggested.add(i)
 
 
 class ASHAScheduler(Scheduler):
@@ -151,6 +218,16 @@ class ASHAScheduler(Scheduler):
 
     def on_idle(self, views: Sequence) -> Dict[str, float]:
         return self._sweep_promotable()
+
+    def preview_metrics(self, view, steps, vals, ticks) -> Optional[int]:
+        """Fast-path contract: only rung crossings do anything in
+        ``on_event`` — points below the trial's next rung are inert
+        CONTINUEs, so the engine may skip their dispatch entirely."""
+        i = self._rung_idx.get(view.key, 0)
+        if i >= len(self.rungs):
+            return None
+        hits = np.nonzero(np.asarray(steps) >= self.rungs[i])[0]
+        return int(hits[0]) if len(hits) else None
 
     # ------------------------------------------------------------- results
     def rank(self, views: Sequence) -> List[str]:

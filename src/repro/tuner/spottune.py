@@ -23,7 +23,9 @@ seed-equivalence test in ``tests/test_tuner.py`` pins that.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.earlycurve import EarlyCurve
 from repro.core.trial import TrialSpec
@@ -41,6 +43,8 @@ class SpotTuneScheduler(Scheduler):
         self._stopped: set = set()
         self._preds: Optional[Dict[str, float]] = None
         self._phase = 1
+        self._supplied: Optional[Dict[str, float]] = None
+        self._fit_keys: List[str] = []
 
     # ------------------------------------------------------------- policy
     def on_trial_added(self, spec: TrialSpec) -> float:
@@ -57,26 +61,95 @@ class SpotTuneScheduler(Scheduler):
                 return STOP
         return CONTINUE
 
+    def preview_metrics(self, view, steps, vals, ticks) -> Optional[int]:
+        """First upcoming metric point whose dispatch would STOP the trial.
+
+        Vectorized mirror of the ``on_event`` plateau check: a point's
+        handler sees the history through the *end of its tick* (same-tick
+        points are appended before any of them dispatches), so convergence
+        is evaluated on every tick-aligned prefix of history + preview."""
+        if view.key in self._stopped:
+            return None
+        W = self.ec.plateau_window
+        tol = self.ec.plateau_tol
+        if W < 2:
+            return 0        # converged() degenerates to True at any length
+        hist = view.metrics_vals
+        n0 = len(hist)
+        m = len(vals)
+        if n0 + m < W:
+            return None
+        # only the trailing W-1 history deltas can sit inside any candidate
+        # plateau window, so the scan is O(W + new points), not O(history)
+        base = max(0, n0 - W)
+        sub = np.empty(n0 - base + m)
+        sub[:n0 - base] = hist[base:]
+        sub[n0 - base:] = vals
+        # same float64 expression as EarlyCurve.converged, elementwise
+        rel_big = (np.abs(np.diff(sub))
+                   / np.maximum(np.abs(sub[:-1]), 1e-12)) >= tol
+        idx = np.arange(base, base + len(rel_big))   # global delta indices
+        last_big = np.maximum.accumulate(np.where(rel_big, idx, -1))
+        ticks = np.asarray(ticks)
+        is_last = np.ones(m, bool)
+        is_last[:-1] = ticks[1:] != ticks[:-1]
+        ends = np.nonzero(is_last)[0]
+        L = n0 + ends + 1                    # history length at each tick end
+        # delta (L-2) sits at slice position L-2-base; earlier (unsliced)
+        # deltas have index <= base-1 <= L-W-1 and can never violate
+        ok = (L >= W) & (last_big[L - 2 - base] <= L - W - 1)
+        hits = np.nonzero(ok)[0]
+        if not len(hits):
+            return None
+        e = int(ends[hits[0]])
+        f = e
+        while f > 0 and ticks[f - 1] == ticks[f]:
+            f -= 1
+        return f
+
     def _predict_all(self, views: Sequence) -> Dict[str, float]:
         preds: Dict[str, float] = {}
+        supplied = self._supplied
+        self._supplied = None
         jobs, job_keys = [], []
         for v in views:
             if self.theta >= 1.0 or v.key in self._stopped:
                 preds[v.key] = v.metrics_vals[-1] if v.metrics_vals else 1e9
+            elif supplied is not None and v.key in supplied:
+                preds[v.key] = supplied[v.key]   # pre-batched by the sweep
             else:
                 jobs.append((v.metrics_steps, v.metrics_vals,
                              v.spec.workload.max_trial_steps))
                 job_keys.append(v.key)
         if jobs:
-            batch = getattr(self.ec, "predict_final_batch", None)
-            if batch is not None:    # one dispatch per stage-length bucket
-                for key, p in zip(job_keys, batch(jobs, seed=self.seed)):
-                    preds[key] = p
-            else:                    # custom predictor without a batch path
-                for key, (steps, vals, tgt) in zip(job_keys, jobs):
-                    preds[key] = self.ec.predict_final(steps, vals, tgt,
-                                                       seed=self.seed)
+            for key, p in zip(job_keys, self.run_idle_fits(jobs)):
+                preds[key] = p
         return preds
+
+    # --------------------------------------------- sweep batching protocol
+    def idle_fit_jobs(self, views: Sequence) -> Optional[list]:
+        if self._phase != 1 or self.theta >= 1.0:
+            return None
+        jobs, keys = [], []
+        for v in views:
+            if v.key not in self._stopped:
+                jobs.append((v.metrics_steps, v.metrics_vals,
+                             v.spec.workload.max_trial_steps))
+                keys.append(v.key)
+        if not jobs:
+            return None
+        self._fit_keys = keys
+        return jobs
+
+    def run_idle_fits(self, jobs: list) -> list:
+        batch = getattr(self.ec, "predict_final_batch", None)
+        if batch is not None:        # one dispatch per stage-length bucket
+            return batch(jobs, seed=self.seed)
+        return [self.ec.predict_final(steps, vals, tgt, seed=self.seed)
+                for steps, vals, tgt in jobs]
+
+    def set_idle_fits(self, preds: list) -> None:
+        self._supplied = dict(zip(self._fit_keys, preds))
 
     def on_idle(self, views: Sequence) -> Dict[str, float]:
         if self._phase == 1:
@@ -99,3 +172,32 @@ class SpotTuneScheduler(Scheduler):
         if self._preds is None:  # run never reached idle (out-of-engine use)
             self._preds = self._predict_all(views)
         return dict(self._preds)
+
+
+class AdaptiveSpotTuneScheduler(SpotTuneScheduler):
+    """SpotTune's θ-budget policy over an *adaptive* searcher.
+
+    Phase 1 becomes a sequential-batch search: at every engine idle the
+    scheduler asks the Tuner for ``suggest_batch`` fresh suggestions — the
+    searcher (e.g. ``AdaptiveGridSearcher``) narrows its proposals around
+    the best results reported so far — until the searcher dries up.  Then
+    the normal SpotTune phase 2 promotes the top-``mcnt`` EarlyCurve
+    predictions to the full budget.  Requires a Tuner constructed with
+    ``initial_trials`` (so the searcher is not drained up front)."""
+
+    def __init__(self, theta: float = 0.7, mcnt: int = 3,
+                 earlycurve: Optional[EarlyCurve] = None, seed: int = 0,
+                 suggest_batch: int = 4):
+        super().__init__(theta=theta, mcnt=mcnt, earlycurve=earlycurve,
+                         seed=seed)
+        self.suggest_batch = suggest_batch
+        self._search_done = False
+
+    def request_suggestions(self, views: Sequence) -> int:
+        if self._phase != 1 or self._search_done:
+            return 0
+        return self.suggest_batch
+
+    def suggestions_added(self, n: int) -> None:
+        if n == 0:
+            self._search_done = True

@@ -5,20 +5,29 @@
                       GridSearcher(workload))
     result    = tuner.run()          # -> RunResult
 
-The facade (1) drains the searcher into the engine (the scheduler picks each
-trial's initial step budget), (2) alternates ``engine.run_until_idle()`` with
-``scheduler.on_idle()`` promotion rounds until the scheduler has nothing left
-to resume, and (3) assembles the ``RunResult`` — cost/JCT/refund accounting
-from the engine, predicted ranking from the scheduler, ground truth from the
-backend.  The legacy ``repro.core.orchestrator`` API is a thin shim over this.
+The facade (1) seeds the engine from the searcher — all of it by default
+(Grid keeps its legacy drain-up-front behavior), or the first
+``initial_trials`` for unbounded/adaptive search; (2) alternates
+``engine.run_until_idle()`` with idle rounds where the scheduler may request
+fresh suggestions (``request_suggestions``) and return promotions
+(``on_idle``) until neither produces work; and (3) assembles the
+``RunResult`` — cost/JCT/refund accounting from the engine, predicted
+ranking from the scheduler, ground truth from the backend.  The legacy
+``repro.core.orchestrator`` API is a thin shim over this.
+
+``run_cooperative()`` is the generator form: it suspends at every engine
+deploy point (``ProvisionBatch``) and idle curve-fit point (``FitRequest``)
+so a sweep runner can interleave many replicas and batch their suspended
+work cross-replica; ``run()`` drives the same generator with local
+servicing, bit-identical to the pre-cooperative loop.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.tuner.engine import ExecutionEngine
+from repro.tuner.engine import ExecutionEngine, Status
 from repro.tuner.scheduler import Scheduler, Searcher
 
 
@@ -53,38 +62,111 @@ class RunResult:
         return alpha / max(self.jct * max(self.cost, 1e-9), 1e-12)
 
 
+@dataclasses.dataclass
+class FitRequest:
+    """A suspended idle curve-fit point of ``Tuner.run_cooperative``.
+
+    ``jobs`` is the scheduler's ``idle_fit_jobs`` list; the driver must set
+    ``responses`` (one predicted final per job, in order) before resuming.
+    ``service_local`` answers with the scheduler's own fitter; a sweep
+    runner instead stacks the jobs of many idle replicas into one batched
+    LM solve (``repro.core.earlycurve.predict_final_grouped``)."""
+
+    scheduler: Scheduler
+    jobs: list
+    responses: Optional[list] = None
+
+    def service_local(self) -> None:
+        self.responses = self.scheduler.run_idle_fits(self.jobs)
+
+
 class Tuner:
     def __init__(self, engine: ExecutionEngine, scheduler: Scheduler,
-                 searcher: Searcher):
+                 searcher: Searcher, initial_trials: Optional[int] = None):
         self.engine = engine
         self.scheduler = scheduler
         self.searcher = searcher
+        self._result: Optional[RunResult] = None
+        self._reported: set = set()
         engine.bind(scheduler)
-        while True:
+        n = 0
+        while initial_trials is None or n < initial_trials:
             spec = searcher.suggest()
             if spec is None:
                 break
-            target = scheduler.on_trial_added(spec)
-            if target is None:
-                target = spec.workload.max_trial_steps
-            engine.add_trial(spec, target)
+            self._admit(spec)
+            n += 1
         if not engine.states:
             raise ValueError("searcher suggested no trials")
 
-    def run(self) -> RunResult:
-        engine, scheduler = self.engine, self.scheduler
+    def _admit(self, spec) -> None:
+        target = self.scheduler.on_trial_added(spec)
+        if target is None:
+            target = spec.workload.max_trial_steps
+        self.engine.add_trial(spec, target)
+
+    def _feed_results(self, views) -> None:
+        """Stream finished-trial metrics to searchers that opted in
+        (``live_results``) — the feedback adaptive searchers refine on."""
+        for v in views:
+            if v.status == Status.FINISHED and v.key not in self._reported:
+                self._reported.add(v.key)
+                self.searcher.on_result(
+                    v.key, v.metrics_vals[-1] if v.metrics_vals else None)
+
+    def run_cooperative(self):
+        """Generator form of ``run()``: yields ``ProvisionBatch`` (engine
+        deploy points) and ``FitRequest`` (idle curve fits); each must be
+        serviced before resuming.  The finished ``RunResult`` lands in
+        ``self.result`` when the generator is exhausted."""
+        engine, scheduler, searcher = self.engine, self.scheduler, self.searcher
+        live = getattr(searcher, "live_results", False)
         while True:
-            engine.run_until_idle()
-            promotions = scheduler.on_idle(engine.views())
+            yield from engine.run_cooperative()
+            views = engine.views()
+            if live:
+                self._feed_results(views)
+            n = scheduler.request_suggestions(views)
+            if n:
+                added = 0
+                for _ in range(n):
+                    spec = searcher.suggest()
+                    if spec is None:
+                        break
+                    self._admit(spec)
+                    added += 1
+                scheduler.suggestions_added(added)
+                if added:
+                    continue
+            jobs = scheduler.idle_fit_jobs(views)
+            if jobs:
+                req = FitRequest(scheduler, jobs)
+                yield req
+                assert req.responses is not None, "unserviced FitRequest"
+                scheduler.set_idle_fits(req.responses)
+            promotions = scheduler.on_idle(views)
             if not promotions:
                 break
             engine.resume(promotions)
+        self._result = self._assemble()
 
+    @property
+    def result(self) -> Optional[RunResult]:
+        return self._result
+
+    def run(self) -> RunResult:
+        for req in self.run_cooperative():
+            req.service_local()
+        return self._result
+
+    def _assemble(self) -> RunResult:
+        engine, scheduler = self.engine, self.scheduler
         views = engine.views()
         preds = scheduler.predictions(views)
         predicted_rank = scheduler.rank(views)
-        for v in views:
-            self.searcher.on_result(v.key, preds.get(v.key))
+        if not getattr(self.searcher, "live_results", False):
+            for v in views:
+                self.searcher.on_result(v.key, preds.get(v.key))
 
         true_finals = {v.key: engine.backend.true_final(v.spec) for v in views}
         true_rank = [k for k, _ in sorted(true_finals.items(), key=lambda kv: kv[1])]

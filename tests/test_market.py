@@ -198,3 +198,36 @@ def test_synth_trace_memoized_and_frozen():
     assert not a.flags.writeable      # read-only price oracle
     c = synth_trace(inst, 1440, seed=3)
     assert not np.array_equal(a, c)
+
+
+def test_batched_trace_synthesis_bit_identical_to_scalar():
+    """The sweep's stacked-OU batch path and the one-at-a-time path must
+    produce the same trace bits per (instance, seed)."""
+    from repro.core.market import clear_trace_caches, synth_traces_batch
+
+    minutes = 1440 * 3
+    insts = DEFAULT_POOL[:3]
+    seeds = [101, 102, 103, 104, 105, 106]
+    clear_trace_caches()
+    solo = {(i.name, s): np.array(synth_trace(i, minutes, s))
+            for s in seeds for i in insts}
+    clear_trace_caches()
+    # 18 jobs >= 16 -> the vectorized recursion path
+    synth_traces_batch([(i, s) for s in seeds for i in insts], minutes)
+    for s in seeds:
+        for i in insts:
+            assert np.array_equal(synth_trace(i, minutes, s),
+                                  solo[(i.name, s)]), (i.name, s)
+
+
+def test_shared_trace_indices_across_market_replicas():
+    """Two SpotMarket replicas of one seed share trace arrays (memo) and
+    therefore prefix/blockmax builds; billing stays replica-local."""
+    m1 = SpotMarket(days=2, seed=31)
+    m2 = SpotMarket(days=2, seed=31)
+    inst = m1.pool[0]
+    assert m1.traces[inst.name] is m2.traces[inst.name]
+    assert m1._price_prefix(inst.name) is m2._price_prefix(inst.name)
+    a = m1.acquire(inst, max_price=inst.od_price * 10, t=0.0)
+    m1.release(a, HOUR, revoked=False)
+    assert m1.billed > 0 and m2.billed == 0.0

@@ -57,11 +57,47 @@ def test_fast_equals_exact_asha_pause_promote():
 
 
 def test_fast_equals_exact_straggler_mode():
-    """Straggler mitigation needs the live perf matrix every tick; the fast
-    path degrades to single-tick stepping and must stay equivalent."""
+    """Straggler mitigation compares the perf matrix each tick; the fast
+    path predicts the comparison's crossing tick by replaying the EWMA fold
+    ahead (engine._straggler_boundary) instead of single-tick stepping, and
+    must stay equivalent."""
     diffs = compare_runs(LOR, days=8.0, n_trials=4, theta=0.5,
                          straggler_factor=1.5)
     assert not diffs, "\n".join(diffs)
+
+
+@pytest.mark.parametrize("factor", [1.05, 1.2, 3.0])
+@pytest.mark.parametrize("market_seed", [3, 9])
+def test_fast_equals_exact_straggler_boundary_sweep(factor, market_seed):
+    """The straggler fast path across trigger-happy (1.05) through rare
+    (3.0) factors, full grid, including the oracle refund-chasing regime."""
+    diffs = compare_runs(LOR, days=8.0, n_trials=6, market_seed=market_seed,
+                         straggler_factor=factor,
+                         revpred_factory=lambda m: OracleRevPred(m))
+    assert not diffs, "\n".join(diffs)
+
+
+def test_straggler_fast_path_actually_jumps(monkeypatch):
+    """Regression for the old single-tick fallback: in straggler mode the
+    event-driven engine must visit far fewer ticks than the exact loop
+    (it used to visit every one of them)."""
+    from repro.tuner import engine as engine_mod
+    from repro.tuner.equivalence import run_one
+
+    calls = {"fast": 0, "exact": 0}
+    orig = engine_mod.ExecutionEngine._tick
+
+    def counting(self, runnable, exact):
+        calls["exact" if exact else "fast"] += 1
+        return orig(self, runnable, exact)
+
+    monkeypatch.setattr(engine_mod.ExecutionEngine, "_tick", counting)
+    fast_eng, _ = run_one(LOR, exact_ticks=False, days=8.0, n_trials=4,
+                          theta=0.5, straggler_factor=1.5)
+    exact_eng, _ = run_one(LOR, exact_ticks=True, days=8.0, n_trials=4,
+                           theta=0.5, straggler_factor=1.5)
+    assert fast_eng.t == exact_eng.t
+    assert calls["fast"] < calls["exact"] / 5
 
 
 @given(st.integers(0, 10_000), st.integers(0, 3))

@@ -1,0 +1,170 @@
+"""Sweep runtime: batched == sequential bit-for-bit, spec grids, CI math.
+
+The determinism contract (ISSUE 3): the same ScenarioSpec grid run through
+``SweepRunner.run`` (replicas interleaved, RevPred forwards and EarlyCurve
+fits batched cross-replica) and through ``run_sequential`` (one fresh
+replica at a time, the pre-sweep workflow) must produce identical
+per-replica billing records, finish times, and metric histories.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.market import SpotMarket
+from repro.core.revpred import RevPred, predict_pool_multi
+from repro.sweep import (ScenarioSpec, Summary, SweepRunner, scenario_grid,
+                         summarize)
+
+DAYS = 8.0
+
+
+def _mixed_grid():
+    specs = scenario_grid(["LoR"], [1, 3], days=DAYS, theta=0.7,
+                          revpred="oracle")
+    specs += scenario_grid(["LoR"], [1], days=DAYS, theta=1.0,
+                           revpred="oracle")
+    specs += scenario_grid(["SVM"], [2, 5], days=DAYS, scheduler="asha",
+                           revpred="zero", n_trials=8)
+    specs += scenario_grid(["GBTR"], [4], days=DAYS, scheduler="adaptive",
+                           searcher="adaptive", initial_trials=6,
+                           revpred="zero")
+    return specs
+
+
+def _assert_replica_equal(spec, fast, slow):
+    ctx = f"{spec.workload}/seed{spec.market_seed}/{spec.scheduler}"
+    assert fast.cost == slow.cost, ctx
+    assert fast.refunded == slow.refunded, ctx
+    assert fast.jct == slow.jct, ctx
+    assert fast.redeployments == slow.redeployments, ctx
+    assert fast.predicted_rank == slow.predicted_rank, ctx
+    assert fast.events == slow.events, ctx          # incl. billing records
+    assert fast.per_trial_steps.keys() == slow.per_trial_steps.keys(), ctx
+    for k in fast.per_trial_steps:
+        assert math.isclose(fast.per_trial_steps[k], slow.per_trial_steps[k],
+                            rel_tol=1e-9, abs_tol=1e-9), (ctx, k)
+
+
+def test_batched_sweep_is_bit_identical_to_sequential():
+    specs = _mixed_grid()
+    runner = SweepRunner()
+    batched = runner.run(specs)
+    seq = runner.run_sequential(specs)
+    assert len(batched) == len(seq) == len(specs)
+    for b, s in zip(batched.replicas, seq.replicas):
+        assert b.spec == s.spec
+        _assert_replica_equal(b.spec, b.result, s.result)
+        assert b.metrics == s.metrics      # full per-trial metric histories
+
+
+def test_batched_sweep_deterministic_across_runs():
+    specs = scenario_grid(["LoR"], [7, 11], days=DAYS, revpred="oracle")
+    runner = SweepRunner()
+    a = runner.run(specs)
+    b = runner.run(specs)
+    for ra, rb in zip(a.replicas, b.replicas):
+        assert ra.result.cost == rb.result.cost
+        assert ra.result.events == rb.result.events
+
+
+def test_sequential_cold_matches_warm_outcomes():
+    """Cache state (cold vs shared-warm) must never change simulation
+    outcomes — only wall time."""
+    specs = scenario_grid(["LoR"], [13], days=DAYS, revpred="oracle")
+    runner = SweepRunner()
+    warm = runner.run_sequential(specs)
+    cold = runner.run_sequential(specs, cold=True)
+    _assert_replica_equal(specs[0], warm.replicas[0].result,
+                          cold.replicas[0].result)
+
+
+def test_trained_predictor_sweep_batched_forward_matches():
+    """Cross-replica stacked RevPred forwards (logreg: fast to train) are
+    row-stable: batched sweep == sequential, trained predictors shared by
+    market seed."""
+    specs = scenario_grid(["LoR"], [1], days=3.0, revpred="logreg",
+                          n_trials=4, theta=1.0)
+    specs += scenario_grid(["LiR"], [1], days=3.0, revpred="logreg",
+                           n_trials=4, theta=1.0)
+    runner = SweepRunner(train_minutes=1000, revpred_epochs=1,
+                         revpred_stride=30)
+    batched = runner.run(specs)
+    seq = runner.run_sequential(specs)
+    for b, s in zip(batched.replicas, seq.replicas):
+        _assert_replica_equal(b.spec, b.result, s.result)
+
+
+def test_predict_pool_multi_matches_per_pool_calls():
+    m1 = SpotMarket(days=3, seed=21)
+    m2 = SpotMarket(days=3, seed=22)
+    rp1 = RevPred.train(m1, train_minutes=1000, kind="logreg", epochs=1,
+                        seed=0, stride=30)
+    rp2 = RevPred.train(m2, train_minutes=1000, kind="logreg", epochs=1,
+                        seed=0, stride=30)
+    t = 1500 * 60.0
+    mp1 = [i.od_price * 0.5 for i in m1.pool]
+    mp2 = [i.od_price * 0.7 for i in m2.pool]
+    solo = [rp1.predict_pool(m1.pool, t, mp1),
+            rp2.predict_pool(m2.pool, t, mp2)]
+    rp1._p_cache.clear()
+    rp2._p_cache.clear()
+    multi = predict_pool_multi([(rp1, m1.pool, t, mp1),
+                                (rp2, m2.pool, t, mp2)])
+    assert multi == solo
+
+
+# ---------------------------------------------------------------- spec grid
+
+
+def test_scenario_grid_shapes_and_broadcast():
+    specs = scenario_grid(["LoR", "SVM"], range(3), theta=[0.3, 0.7],
+                          revpred="zero")
+    assert len(specs) == 2 * 3 * 2
+    assert {s.theta for s in specs} == {0.3, 0.7}
+    assert all(s.revpred == "zero" for s in specs)
+    # frozen + hashable (usable as dict keys / dedup)
+    assert len(set(specs)) == len(specs)
+
+
+def test_spec_asdict_round_trips_json():
+    import json
+    spec = ScenarioSpec(workload="LoR", market_seed=5, theta=0.5)
+    blob = json.loads(json.dumps(spec.asdict()))
+    assert blob["workload"] == "LoR" and blob["theta"] == 0.5
+
+
+# ----------------------------------------------------------------- CI math
+
+
+def test_summarize_ci_small_sample():
+    s = summarize([1.0, 2.0, 3.0, 4.0])
+    assert s.n == 4
+    assert s.mean == pytest.approx(2.5)
+    assert s.std == pytest.approx(np.std([1, 2, 3, 4], ddof=1))
+    # t(0.975, df=3) = 3.182
+    assert s.ci95 == pytest.approx(3.182 * s.std / 2.0)
+    assert s.lo < s.mean < s.hi
+
+
+def test_summarize_degenerate():
+    assert summarize([5.0]) == Summary(1, 5.0, 0.0, 0.0)
+    assert math.isnan(summarize([]).mean)
+
+
+def test_sweep_result_grouping_and_export(tmp_path):
+    specs = scenario_grid(["LoR"], [1, 3], days=DAYS, revpred="oracle")
+    res = SweepRunner().run(specs)
+    groups = res.summarize("cost", by=("workload",))
+    assert set(groups) == {("LoR",)}
+    assert groups[("LoR",)].n == 2
+    jpath = tmp_path / "sweep.json"
+    cpath = tmp_path / "sweep.csv"
+    res.to_json(str(jpath))
+    res.to_csv(str(cpath))
+    import json
+    blob = json.loads(jpath.read_text())
+    assert blob["mode"] == "batched" and len(blob["replicas"]) == 2
+    assert "cost" in blob["replicas"][0]
+    assert cpath.read_text().count("\n") >= 3

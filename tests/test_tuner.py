@@ -176,3 +176,61 @@ def test_legacy_shim_exposes_states_and_config():
     res = orch.run()
     assert dataclasses.is_dataclass(res)
     assert all(s.status == Status.FINISHED for s in orch.states)
+
+
+# ---------------------------------------------------------------------------
+# incremental suggestion (ISSUE 3 satellite): idle-time searcher draws
+# ---------------------------------------------------------------------------
+
+
+def test_grid_behavior_unchanged_by_incremental_protocol():
+    """Default Tuner (no initial_trials) still drains Grid up front and
+    reproduces the legacy result exactly — the incremental path is opt-in."""
+    w = WORKLOADS[0]
+    m1 = SpotMarket(days=12, seed=3)
+    b1 = SimTrialBackend(m1.pool)
+    legacy = build_spottune(make_trials(w), m1, b1, ZeroRevPred(),
+                            theta=0.7, mcnt=3, seed=0).run()
+    res = Tuner(_fresh_engine(), SpotTuneScheduler(theta=0.7, mcnt=3),
+                GridSearcher(w)).run()
+    assert res.cost == legacy.cost and res.events == legacy.events
+    assert res.predicted_rank == legacy.predicted_rank
+
+
+def test_initial_trials_caps_upfront_draining():
+    w = WORKLOADS[0]
+    searcher = GridSearcher(w)
+    engine = _fresh_engine()
+    tuner = Tuner(engine, Scheduler(), searcher, initial_trials=4)
+    assert len(engine.states) == 4
+    assert len(searcher._pending) == 12      # rest stays with the searcher
+
+
+def test_adaptive_scheduler_requests_more_at_idle():
+    from repro.tuner import AdaptiveGridSearcher, AdaptiveSpotTuneScheduler
+
+    w = WORKLOADS[0]
+    searcher = AdaptiveGridSearcher(w, initial=6, batch=4, seed=1)
+    engine = _fresh_engine()
+    tuner = Tuner(engine, AdaptiveSpotTuneScheduler(theta=0.7, mcnt=3,
+                                                    suggest_batch=4),
+                  searcher, initial_trials=6)
+    res = tuner.run()
+    n_trials = len(res.per_trial_steps)
+    assert 6 < n_trials < 16          # refined beyond the seed set, not full grid
+    assert searcher._results          # live on_result feedback arrived
+    assert res.predicted_rank         # phase-2 promotion + ranking happened
+
+
+def test_unbounded_random_searcher_streams_grid():
+    from repro.tuner import RandomSearcher
+
+    w = WORKLOADS[0]
+    s = RandomSearcher(w, num_samples=None, seed=3)
+    seen = set()
+    while True:
+        spec = s.suggest()
+        if spec is None:
+            break
+        seen.add(spec.idx)
+    assert len(seen) == len(w.hp_grid())
