@@ -1,15 +1,23 @@
-"""Beyond-paper: ASHA and adaptive search vs the paper's grid policy on the
+"""Beyond-paper: the search-policy suite vs the paper's grid policy on the
 same transient engine.
 
 One row per (workload, policy): total $ cost, JCT, and whether the true-best
 HP setting survived into the policy's top-3.  The point of the comparison:
-the pluggable split means a modern multi-fidelity search policy rides the
-identical market/provisioner/refund mechanics as the paper's exhaustive grid,
-and the revocation-forced checkpoints ASHA exploits as free rung boundaries
-come from the engine, not the policy.  The third policy exercises the
-incremental-suggestion path: ``AdaptiveGridSearcher`` starts from a random
-subset and narrows around the best finished results (``Searcher.on_result``
-feedback), spending fewer trials than the exhaustive grid.
+the pluggable split means modern multi-fidelity and model-based search
+policies ride the identical market/provisioner/refund mechanics as the
+paper's exhaustive grid, and the revocation-forced checkpoints the halving
+policies exploit as free rung boundaries come from the engine, not the
+policy.  Policies (all registered in ``repro.tuner.registry``, conformance-
+pinned by tests/test_policy_contract.py):
+
+  spottune   the paper's θ + EarlyCurve top-mcnt policy over the full grid
+  asha       asynchronous successive halving, revocations as free rungs
+  hyperband  multiple ASHA brackets, budget-proportional bracket sampling
+  pbt        population-based training: truncation selection via
+             PAUSE/PROMOTE, perturb/resample replacements at idle
+  adaptive   θ-budget policy over TrimTuner cost-aware BO (sub-sampled
+             bootstrap wave, EI-per-cost acquisition) on the
+             incremental-suggestion path
 """
 
 from __future__ import annotations
@@ -17,18 +25,25 @@ from __future__ import annotations
 from benchmarks.common import Timer, build_tuner, fresh_market
 from repro.core.provisioner import ZeroRevPred
 from repro.core.trial import WORKLOADS, SimTrialBackend
-from repro.tuner import (AdaptiveGridSearcher, AdaptiveSpotTuneScheduler,
-                         ASHAScheduler, GridSearcher, SpotTuneScheduler)
+from repro.tuner import (AdaptiveSpotTuneScheduler, ASHAScheduler,
+                         GridSearcher, HyperbandScheduler, PBTScheduler,
+                         PBTSearcher, SpotTuneScheduler, TrimTunerSearcher)
+
+RATIO_POLICIES = ("asha", "hyperband", "pbt", "adaptive")
 
 
 def _policies(w, seed):
     yield ("spottune", SpotTuneScheduler(theta=0.7, mcnt=3, seed=seed),
            GridSearcher(w), None)
     yield ("asha", ASHAScheduler(eta=3), GridSearcher(w), None)
+    yield ("hyperband", HyperbandScheduler(eta=3, num_brackets=3, seed=seed),
+           GridSearcher(w), None)
+    yield ("pbt", PBTScheduler(population=8, seed=seed),
+           PBTSearcher(w, population=8, seed=seed), 8)
     yield ("adaptive",
            AdaptiveSpotTuneScheduler(theta=0.7, mcnt=3, seed=seed,
                                      suggest_batch=4),
-           AdaptiveGridSearcher(w, initial=6, batch=4, seed=seed), 6)
+           TrimTunerSearcher(w, initial=6, batch=3, seed=seed), 6)
 
 
 def run(workloads=None, seed: int = 0):
@@ -47,9 +62,9 @@ def run(workloads=None, seed: int = 0):
                          f"cost={res.cost:.2f}|jct_h={res.jct/3600:.2f}"
                          f"|top3={int(res.top3_contains_best)}"
                          f"|trials={len(res.per_trial_steps)}"))
-        ratio = results["asha"].cost / max(results["spottune"].cost, 1e-9)
-        rows.append((f"asha_cmp_{w.name}_cost_ratio", 0.0, f"{ratio:.3f}"))
-        ratio = results["adaptive"].cost / max(results["spottune"].cost, 1e-9)
-        rows.append((f"asha_cmp_{w.name}_adaptive_cost_ratio", 0.0,
-                     f"{ratio:.3f}"))
+        base = max(results["spottune"].cost, 1e-9)
+        for name in RATIO_POLICIES:
+            suffix = "cost_ratio" if name == "asha" else f"{name}_cost_ratio"
+            rows.append((f"asha_cmp_{w.name}_{suffix}", 0.0,
+                         f"{results[name].cost / base:.3f}"))
     return rows

@@ -85,11 +85,28 @@ class TrialSpec:
     workload: Workload
     hp: dict
     idx: int
+    # fraction of the workload's full budget this suggestion asks for; <1 is
+    # a sub-sampled cheap evaluation (TrimTuner-style) — honored by
+    # schedulers whose on_trial_added consults it, ignored by the rest
+    budget_frac: float = 1.0
 
     def __post_init__(self):
         # cached: the key is read on every perf-matrix/curve lookup in the
         # simulation hot loop (specs are never re-pointed after construction)
         self.key = f"{self.workload.name}/hp{self.idx:02d}"
+
+    def decay_steps(self) -> Optional[int]:
+        """Steps between the *declared* LR-decay boundaries of this config
+        (the ``ds``/``de`` HP dims; ``dr >= 1.0`` with ``ds`` means constant
+        LR, a single smooth stage).  Known a priori from the HP setting —
+        both the simulation backend (curve staging) and schedulers that
+        reason about extrapolation reliability read the same rule here."""
+        for key in ("ds", "de"):
+            if key in self.hp:
+                if key == "ds" and self.hp.get("dr", 0.9) >= 1.0:
+                    return None
+                return int(self.hp[key])
+        return None
 
 
 def make_trials(workload: Workload) -> List[TrialSpec]:
@@ -238,13 +255,7 @@ class SimTrialBackend:
         return 0.25 + 0.5 * q / (len(trial.hp) + 0.5)
 
     def _decay_steps(self, trial: TrialSpec) -> Optional[int]:
-        for key in ("ds", "de"):
-            if key in trial.hp:
-                dr = trial.hp.get("dr", 0.9)
-                if dr >= 1.0 and key == "ds":
-                    return None            # dr=1.0 -> constant LR, single stage
-                return int(trial.hp[key])
-        return None
+        return trial.decay_steps()
 
     def curve(self, trial: TrialSpec) -> np.ndarray:
         """Validation-loss value at every val_every step grid point."""

@@ -14,4 +14,4 @@ from repro.sweep.result import (ReplicaResult, Summary, SweepResult,  # noqa: F4
 from repro.sweep.runner import SweepRunner, clear_shared_caches  # noqa: F401
 from repro.sweep.spec import (ScenarioSpec, build_replica,  # noqa: F401
                               build_revpred, build_scheduler, build_searcher,
-                              scenario_grid)
+                              resolve_policy, scenario_grid)

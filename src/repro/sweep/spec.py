@@ -19,10 +19,8 @@ from repro.core.market import SpotMarket
 from repro.core.provisioner import ZeroRevPred
 from repro.core.revpred import OracleRevPred, RevPred
 from repro.core.trial import WORKLOADS, SimTrialBackend, Workload
-from repro.tuner import (AdaptiveGridSearcher, AdaptiveSpotTuneScheduler,
-                         ASHAScheduler, GridSearcher, RandomSearcher,
-                         Scheduler, Searcher, SpotTuneScheduler, Tuner,
-                         build_engine)
+from repro.tuner import (POLICY_DEFAULTS, Scheduler, Searcher, Tuner,
+                         build_engine, make_scheduler, make_searcher)
 
 _WORKLOADS_BY_NAME: Dict[str, Workload] = {w.name: w for w in WORKLOADS}
 
@@ -33,11 +31,19 @@ class ScenarioSpec:
 
     workload: str                        # Table-II workload name
     market_seed: int
-    scheduler: str = "spottune"          # spottune | asha | adaptive | base
+    # any name registered in repro.tuner.registry.SCHEDULERS:
+    # spottune | adaptive | asha | hyperband | pbt | base
+    scheduler: str = "spottune"
     theta: float = 0.7
     mcnt: int = 3
     eta: int = 3
-    searcher: str = "grid"               # grid | random | adaptive
+    brackets: int = 3                    # hyperband bracket count
+    population: int = 8                  # pbt population size
+    # any name in registry.SEARCHERS: grid | random | adaptive (TrimTuner
+    # cost-aware BO) | trimtuner | adaptive-grid | pbt.  None = the
+    # scheduler's paired default (registry.POLICY_DEFAULTS), else grid —
+    # an explicit name is always honored
+    searcher: Optional[str] = None
     num_samples: Optional[int] = None    # random searcher sample count
     initial_trials: Optional[int] = None
     revpred: str = "oracle"              # oracle | zero | revpred | tributary | logreg
@@ -89,31 +95,40 @@ def scenario_grid(workloads: Union[str, Iterable[str]],
     return specs
 
 
+def _policy_params(spec: ScenarioSpec) -> dict:
+    """Flat knob mapping the registry factories pick from."""
+    return {"seed": spec.engine_seed, "theta": spec.theta, "mcnt": spec.mcnt,
+            "eta": spec.eta, "brackets": spec.brackets,
+            "population": spec.population, "num_samples": spec.num_samples}
+
+
+def resolve_policy(spec: ScenarioSpec) -> tuple:
+    """(scheduler name, searcher name, initial_trials) with the registry's
+    paired-policy defaults applied: a bare spec (searcher/initial_trials
+    left unset) gets the scheduler's companion wiring — PBT its explore
+    searcher and population seeding, adaptive its incremental TrimTuner
+    wave.  Explicit spec values always win."""
+    searcher, initial = spec.searcher, spec.initial_trials
+    defaults = POLICY_DEFAULTS.get(spec.scheduler, {})
+    if searcher is None:
+        searcher = defaults.get("searcher", "grid")
+    if initial is None and "initial_trials" in defaults:
+        initial = defaults["initial_trials"]
+        if initial == "population":
+            initial = spec.population
+    return spec.scheduler, searcher, initial
+
+
 def build_scheduler(spec: ScenarioSpec) -> Scheduler:
-    if spec.scheduler == "spottune":
-        return SpotTuneScheduler(theta=spec.theta, mcnt=spec.mcnt,
-                                 seed=spec.engine_seed)
-    if spec.scheduler == "adaptive":
-        return AdaptiveSpotTuneScheduler(theta=spec.theta, mcnt=spec.mcnt,
-                                         seed=spec.engine_seed)
-    if spec.scheduler == "asha":
-        return ASHAScheduler(eta=spec.eta)
-    if spec.scheduler == "base":
-        return Scheduler()
-    raise ValueError(f"unknown scheduler {spec.scheduler!r}")
+    return make_scheduler(spec.scheduler, spec.workload_obj(),
+                          _policy_params(spec))
 
 
-def build_searcher(spec: ScenarioSpec) -> Searcher:
+def build_searcher(spec: ScenarioSpec,
+                   name: Optional[str] = None) -> Searcher:
     w = spec.workload_obj()
-    if spec.searcher == "grid":
-        s = GridSearcher(w)
-    elif spec.searcher == "random":
-        s = RandomSearcher(w, num_samples=spec.num_samples,
-                           seed=spec.engine_seed)
-    elif spec.searcher == "adaptive":
-        s = AdaptiveGridSearcher(w, seed=spec.engine_seed)
-    else:
-        raise ValueError(f"unknown searcher {spec.searcher!r}")
+    s = make_searcher(name or spec.searcher or "grid", w,
+                      _policy_params(spec))
     if spec.n_trials is not None:
         if not hasattr(s, "_pending"):
             # an adaptive searcher keeps refining past any prefix — a silent
@@ -143,5 +158,7 @@ def build_replica(spec: ScenarioSpec, market: SpotMarket,
     """Spec + (possibly shared) market/backend/predictor -> runnable Tuner."""
     engine = build_engine(market, backend, revpred, seed=spec.engine_seed,
                           straggler_factor=spec.straggler_factor)
-    return Tuner(engine, build_scheduler(spec), build_searcher(spec),
-                 initial_trials=spec.initial_trials)
+    _, searcher_name, initial = resolve_policy(spec)
+    return Tuner(engine, build_scheduler(spec),
+                 build_searcher(spec, name=searcher_name),
+                 initial_trials=initial)

@@ -6,6 +6,8 @@ events      typed trial lifecycle events the engine emits
 scheduler   Scheduler/Searcher protocols, Decision vocabulary, TrialView
 searchers   GridSearcher / RandomSearcher / ListSearcher + ASHAScheduler
 spottune    the paper's theta + EarlyCurve top-mcnt policy as a Scheduler
+policies    Hyperband brackets, PBT exploit/explore, TrimTuner cost-aware BO
+registry    name -> factory registry (sweeps, benchmarks, conformance tests)
 tuner       Tuner facade + RunResult
 """
 
@@ -18,6 +20,11 @@ from repro.tuner.events import (HourRotation, MetricReported,  # noqa: F401
 from repro.tuner.scheduler import (CONTINUE, PAUSE, PROMOTE, STOP,  # noqa: F401
                                    Decision, DecisionKind, Scheduler, Searcher,
                                    TrialView)
+from repro.tuner.policies import (HyperbandScheduler,  # noqa: F401
+                                  PBTScheduler, PBTSearcher,
+                                  TrimTunerSearcher)
+from repro.tuner.registry import (POLICY_DEFAULTS, SCHEDULERS,  # noqa: F401
+                                  SEARCHERS, make_scheduler, make_searcher)
 from repro.tuner.searchers import (AdaptiveGridSearcher,  # noqa: F401
                                    ASHAScheduler, GridSearcher, ListSearcher,
                                    RandomSearcher)

@@ -91,6 +91,7 @@ class TrialState:
     lost_steps: float = 0.0
     ckpt_seconds: float = 0.0
     restore_seconds: float = 0.0
+    billed_cost: float = 0.0         # $ billed to this trial, net of refunds
     redeployments: int = 0
     stopped: bool = False            # a STOP decision was applied
     pause_requested: bool = False
@@ -235,6 +236,7 @@ class ExecutionEngine:
     def _release(self, st: TrialState, revoked: bool) -> dict:
         rec = self.market.release(st.alloc, self.t, revoked=revoked)
         steps_this_alloc = st.ckpt_steps - st.alloc_start_steps
+        st.billed_cost += rec["cost"] - rec["refund"]
         if rec["refund"] > 0:
             st.free_steps += max(steps_this_alloc, 0.0)
         self.events.append((self.t, "release", st.spec.key, rec))

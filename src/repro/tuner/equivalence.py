@@ -104,8 +104,15 @@ def run_one(workload: Workload, exact_ticks: bool, market_seed: int = 3,
             seed: int = 0, theta: float = 0.7, mcnt: int = 3,
             days: float = 12.0, revpred_factory: Optional[Callable] = None,
             scheduler_factory: Optional[Callable] = None,
+            searcher_factory: Optional[Callable] = None,
+            initial_trials: Optional[int] = None,
             n_trials: Optional[int] = None, **engine_kw):
-    """One tuning run on a fresh market replica -> (engine, RunResult)."""
+    """One tuning run on a fresh market replica -> (engine, RunResult).
+
+    ``searcher_factory(workload)`` swaps the default ListSearcher prefix
+    (paired policies like PBT bring their own explore searcher);
+    ``initial_trials`` passes through to the Tuner for incremental
+    suggestion."""
     market = SpotMarket(days=days, seed=market_seed)
     backend = SimTrialBackend(market.pool)
     revpred = (revpred_factory or (lambda m: ZeroRevPred()))(market)
@@ -114,10 +121,18 @@ def run_one(workload: Workload, exact_ticks: bool, market_seed: int = 3,
     scheduler = (scheduler_factory or
                  (lambda: SpotTuneScheduler(theta=theta, mcnt=mcnt,
                                             seed=seed)))()
-    trials = make_trials(workload)
-    if n_trials is not None:
-        trials = trials[:n_trials]
-    res = Tuner(engine, scheduler, ListSearcher(trials)).run()
+    if searcher_factory is not None:
+        assert n_trials is None, \
+            "n_trials only trims the default ListSearcher; cap the " \
+            "searcher_factory's own suggestion budget instead"
+        searcher = searcher_factory(workload)
+    else:
+        trials = make_trials(workload)
+        if n_trials is not None:
+            trials = trials[:n_trials]
+        searcher = ListSearcher(trials)
+    res = Tuner(engine, scheduler, searcher,
+                initial_trials=initial_trials).run()
     return engine, res
 
 

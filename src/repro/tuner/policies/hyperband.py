@@ -1,0 +1,119 @@
+"""Hyperband on the transient engine: ASHA brackets x bracket sampling.
+
+Hyperband hedges successive halving's aggressiveness by running several
+halving *brackets* in parallel, each starting its rung ladder at a higher
+minimum resource.  The asynchronous formulation used here (syne-tune style)
+keeps one ``ASHAScheduler`` per bracket and assigns every suggested trial to
+a bracket up front with *budget-proportional* sampling: bracket ``b``'s
+weight is inversely proportional to the minimum step commitment a trial
+makes there (its first rung, or the full budget for the rung-less run-to-
+completion bracket), so each bracket receives roughly the same aggregate
+minimum budget — aggressive brackets get proportionally more trials, the
+conservative ones fewer, which is Hyperband's n_i allocation restated for
+the asynchronous setting.
+
+The transient twist is inherited per bracket from ASHA: a revocation
+already forced a checkpoint, so it doubles as a free rung boundary — a
+revoked trial below its bracket rung's cutoff is parked instead of
+redeployed.  ``preview_metrics`` routes to the trial's bracket (next rung
+milestone), so the engine's boundary-jumping fast path skips every inert
+crossing exactly as it does for plain ASHA.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.trial import TrialSpec
+from repro.tuner.scheduler import CONTINUE, Decision, Scheduler
+from repro.tuner.searchers import ASHAScheduler, rung_ladder
+
+
+class HyperbandScheduler(Scheduler):
+    """Multiple ASHA brackets; trials sampled into brackets by budget."""
+
+    def __init__(self, eta: int = 3, num_rungs: int = 3,
+                 num_brackets: int = 3, min_steps: Optional[int] = None,
+                 seed: int = 0):
+        assert eta >= 2 and num_brackets >= 1
+        self.eta = eta
+        self.num_rungs = num_rungs
+        self.num_brackets = num_brackets
+        self.min_steps = min_steps
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._workload_name: Optional[str] = None
+        self.brackets: List[ASHAScheduler] = []
+        self._weights: Optional[np.ndarray] = None
+        self._bracket_of: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- set-up
+    def _build(self, w) -> None:
+        ladder = rung_ladder(w, self.eta, self.num_rungs, self.min_steps)
+        self._workload_name = w.name
+        # bracket b drops the b lowest rungs; the last admissible bracket
+        # (b == len(ladder)) has no rungs at all = plain run-to-completion
+        n = max(1, min(self.num_brackets, len(ladder) + 1))
+        weights = []
+        for b in range(n):
+            self.brackets.append(
+                ASHAScheduler(eta=self.eta, num_rungs=self.num_rungs,
+                              min_steps=self.min_steps, ladder=ladder[b:]))
+            floor = ladder[b] if b < len(ladder) else w.max_trial_steps
+            weights.append(1.0 / floor)
+        arr = np.asarray(weights, np.float64)
+        self._weights = arr / arr.sum()
+
+    def on_trial_added(self, spec: TrialSpec) -> float:
+        w = spec.workload
+        if self.brackets:
+            assert w.name == self._workload_name, \
+                "HyperbandScheduler supports one workload per run"
+        else:
+            self._build(w)
+        b = int(self._rng.choice(len(self.brackets), p=self._weights))
+        self._bracket_of[spec.key] = b
+        return self.brackets[b].on_trial_added(spec)
+
+    # ------------------------------------------------------------- routing
+    def _bracket(self, key: str) -> Optional[ASHAScheduler]:
+        b = self._bracket_of.get(key)
+        return None if b is None else self.brackets[b]
+
+    def on_event(self, event, view) -> Decision:
+        br = self._bracket(event.trial)
+        return br.on_event(event, view) if br is not None else CONTINUE
+
+    def take_promotions(self) -> Dict[str, float]:
+        promos: Dict[str, float] = {}
+        for br in self.brackets:
+            promos.update(br.take_promotions())
+        return promos
+
+    def on_idle(self, views: Sequence) -> Dict[str, float]:
+        promos: Dict[str, float] = {}
+        for br in self.brackets:
+            promos.update(br.on_idle(views))
+        return promos
+
+    def preview_metrics(self, view, steps, vals, ticks) -> Optional[int]:
+        br = self._bracket(view.key)
+        return None if br is None else br.preview_metrics(view, steps, vals,
+                                                          ticks)
+
+    # ------------------------------------------------------------- results
+    def rank(self, views: Sequence) -> List[str]:
+        preds = self.predictions(views)
+
+        def depth(v) -> int:
+            b = self._bracket_of.get(v.key)
+            if b is None:
+                return 0
+            # rungs cleared, counted on the full ladder: bracket b's rung i
+            # is global rung i + b, so survivors compare across brackets
+            return self.brackets[b]._rung_idx.get(v.key, 0) + b
+
+        return [v.key for v in sorted(
+            views, key=lambda v: (-depth(v), preds[v.key]))]

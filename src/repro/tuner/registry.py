@@ -1,0 +1,95 @@
+"""Name -> factory registry for schedulers and searchers.
+
+One place names every pluggable policy so the three consumers stay in
+lock-step:
+
+  * ``repro.sweep.spec`` builds replicas from ``ScenarioSpec`` strings,
+  * ``benchmarks`` (asha_compare, sweep_experiments) enumerate policies,
+  * ``tests/test_policy_contract.py`` — the conformance harness — runs its
+    decision-vocabulary, preview-consistency, and searcher invariants over
+    *every registered entry*, which is the definition of done for a new
+    policy (docs/tuner_api.md walks through adding one).
+
+Factories take ``(workload, params)`` where ``params`` is a flat mapping of
+policy knobs (a ``ScenarioSpec``'s fields, or a hand-built dict); each
+factory picks the knobs it understands and ignores the rest, so one params
+dict can drive any policy.  ``POLICY_DEFAULTS`` records each scheduler's
+companion searcher and initial-trial seeding for paired policies (PBT needs
+its explore searcher; the adaptive/TrimTuner pair needs incremental
+suggestion instead of drain-up-front).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping, Optional
+
+from repro.core.trial import Workload
+from repro.tuner.policies.hyperband import HyperbandScheduler
+from repro.tuner.policies.pbt import PBTScheduler, PBTSearcher
+from repro.tuner.policies.trimtuner import TrimTunerSearcher
+from repro.tuner.scheduler import Scheduler, Searcher
+from repro.tuner.searchers import (AdaptiveGridSearcher, ASHAScheduler,
+                                   GridSearcher, RandomSearcher)
+from repro.tuner.spottune import AdaptiveSpotTuneScheduler, SpotTuneScheduler
+
+SchedulerFactory = Callable[[Workload, Mapping], Scheduler]
+SearcherFactory = Callable[[Workload, Mapping], Searcher]
+
+
+SCHEDULERS: Dict[str, SchedulerFactory] = {
+    "base": lambda w, p: Scheduler(),
+    "spottune": lambda w, p: SpotTuneScheduler(
+        theta=p.get("theta", 0.7), mcnt=p.get("mcnt", 3),
+        seed=p.get("seed", 0)),
+    "adaptive": lambda w, p: AdaptiveSpotTuneScheduler(
+        theta=p.get("theta", 0.7), mcnt=p.get("mcnt", 3),
+        seed=p.get("seed", 0)),
+    "asha": lambda w, p: ASHAScheduler(eta=p.get("eta", 3)),
+    "hyperband": lambda w, p: HyperbandScheduler(
+        eta=p.get("eta", 3), num_brackets=p.get("brackets", 3),
+        seed=p.get("seed", 0)),
+    "pbt": lambda w, p: PBTScheduler(
+        population=p.get("population", 8), seed=p.get("seed", 0)),
+}
+
+SEARCHERS: Dict[str, SearcherFactory] = {
+    "grid": lambda w, p: GridSearcher(w),
+    "random": lambda w, p: RandomSearcher(
+        w, num_samples=p.get("num_samples"), seed=p.get("seed", 0)),
+    # "adaptive" is the request_suggestions idle-path default; TrimTuner's
+    # cost-aware BO replaced the Hamming-halving grid searcher there (the
+    # old behavior stays available as "adaptive-grid")
+    "adaptive": lambda w, p: TrimTunerSearcher(w, seed=p.get("seed", 0)),
+    "trimtuner": lambda w, p: TrimTunerSearcher(w, seed=p.get("seed", 0)),
+    "adaptive-grid": lambda w, p: AdaptiveGridSearcher(
+        w, seed=p.get("seed", 0)),
+    "pbt": lambda w, p: PBTSearcher(
+        w, population=p.get("population", 8), seed=p.get("seed", 0)),
+}
+
+# scheduler name -> paired-searcher wiring a bare spec should default to.
+# ``searcher`` replaces the generic "grid" default; ``initial_trials``
+# applies only when the spec leaves it unset ("population" = the
+# scheduler's population knob).
+POLICY_DEFAULTS: Dict[str, dict] = {
+    "pbt": {"searcher": "pbt", "initial_trials": "population"},
+    "adaptive": {"searcher": "adaptive", "initial_trials": 6},
+}
+
+
+def make_scheduler(name: str, workload: Workload,
+                   params: Optional[Mapping] = None, **kw) -> Scheduler:
+    try:
+        factory = SCHEDULERS[name]
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}") from None
+    return factory(workload, {**(params or {}), **kw})
+
+
+def make_searcher(name: str, workload: Workload,
+                  params: Optional[Mapping] = None, **kw) -> Searcher:
+    try:
+        factory = SEARCHERS[name]
+    except KeyError:
+        raise ValueError(f"unknown searcher {name!r}") from None
+    return factory(workload, {**(params or {}), **kw})

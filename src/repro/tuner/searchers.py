@@ -132,19 +132,43 @@ class AdaptiveGridSearcher(Searcher):
             self._suggested.add(i)
 
 
+def rung_ladder(workload: Workload, eta: int, num_rungs: int,
+                min_steps: Optional[int] = None) -> List[int]:
+    """Ascending successive-halving step milestones for one workload:
+    eta-fold apart from the full budget down, snapped up to the metric grid
+    so a value exists at every crossing.  The single derivation behind both
+    ``ASHAScheduler`` and ``HyperbandScheduler``'s bracket slices."""
+    lo = min_steps or workload.val_every
+    rungs = []
+    r = workload.max_trial_steps
+    for _ in range(num_rungs):
+        r = r // eta
+        if r < lo:
+            break
+        rungs.append(int(math.ceil(r / workload.val_every) * workload.val_every))
+    return sorted(set(rungs))
+
+
 class ASHAScheduler(Scheduler):
-    """Asynchronous successive halving; revocations double as rung stops."""
+    """Asynchronous successive halving; revocations double as rung stops.
+
+    ``ladder`` pre-builds the rung milestones (Hyperband hands each bracket
+    a slice of the full ladder — possibly empty, for the run-to-completion
+    bracket); left None, the ladder derives from the first trial's
+    workload via ``rung_ladder``."""
 
     def __init__(self, eta: int = 3, num_rungs: int = 3,
-                 min_steps: Optional[int] = None):
+                 min_steps: Optional[int] = None,
+                 ladder: Optional[List[int]] = None):
         assert eta >= 2
         self.eta = eta
         self.num_rungs = num_rungs
         self.min_steps = min_steps
         self._workload_name: Optional[str] = None
-        self.rungs: List[int] = []            # ascending step milestones
+        self._prebuilt = ladder is not None
+        self.rungs: List[int] = list(ladder or [])  # ascending milestones
         self._rung_idx: Dict[str, int] = {}   # next rung each trial must clear
-        self._results: List[Dict[str, float]] = []
+        self._results: List[Dict[str, float]] = [{} for _ in self.rungs]
         self._paused: Dict[str, int] = {}     # key -> rung it paused at
         self._targets: Dict[str, float] = {}
         self._promos: Dict[str, float] = {}
@@ -152,24 +176,17 @@ class ASHAScheduler(Scheduler):
     # ------------------------------------------------------------- set-up
     def on_trial_added(self, spec: TrialSpec) -> float:
         w = spec.workload
-        if self.rungs:
+        if self._workload_name is not None:
             # rungs are derived from the first workload's step grid; a mixed
             # pool would silently never pause the smaller-budget trials
             assert w.name == self._workload_name, \
                 "ASHAScheduler supports one workload per run"
         else:
             self._workload_name = w.name
-            lo = self.min_steps or w.val_every
-            rungs = []
-            r = w.max_trial_steps
-            for _ in range(self.num_rungs):
-                r = r // self.eta
-                if r < lo:
-                    break
-                # snap to the metric grid so a value exists at the crossing
-                rungs.append(int(math.ceil(r / w.val_every) * w.val_every))
-            self.rungs = sorted(set(rungs))
-            self._results = [{} for _ in self.rungs]
+            if not self._prebuilt:
+                self.rungs = rung_ladder(w, self.eta, self.num_rungs,
+                                         self.min_steps)
+                self._results = [{} for _ in self.rungs]
         self._rung_idx[spec.key] = 0
         self._targets[spec.key] = w.max_trial_steps
         return w.max_trial_steps

@@ -179,11 +179,19 @@ class AdaptiveSpotTuneScheduler(SpotTuneScheduler):
 
     Phase 1 becomes a sequential-batch search: at every engine idle the
     scheduler asks the Tuner for ``suggest_batch`` fresh suggestions — the
-    searcher (e.g. ``AdaptiveGridSearcher``) narrows its proposals around
-    the best results reported so far — until the searcher dries up.  Then
-    the normal SpotTune phase 2 promotes the top-``mcnt`` EarlyCurve
-    predictions to the full budget.  Requires a Tuner constructed with
-    ``initial_trials`` (so the searcher is not drained up front)."""
+    searcher (``TrimTunerSearcher`` cost-aware BO by default,
+    ``AdaptiveGridSearcher`` Hamming-halving as the legacy option) narrows
+    its proposals around the results reported so far — until the searcher
+    dries up.  Suggestions may be *sub-sampled* (``TrialSpec.budget_frac``
+    < 1, TrimTuner's cheap bootstrap wave): their budget is ``theta *
+    budget_frac`` of the full run.  Once the search is dry, a fidelity-gap
+    round (``_fidelity_promotions``) verifies every under-sampled trial
+    whose declared LR schedule decays beyond the steps it ran at the
+    standard θ budget, so the final selection never extrapolates across
+    curve stages a cheap run couldn't see; then the normal SpotTune
+    phase 2 promotes the top-``mcnt`` to the full budget.  Requires a
+    Tuner constructed with ``initial_trials`` (so the searcher is not
+    drained up front)."""
 
     def __init__(self, theta: float = 0.7, mcnt: int = 3,
                  earlycurve: Optional[EarlyCurve] = None, seed: int = 0,
@@ -192,6 +200,13 @@ class AdaptiveSpotTuneScheduler(SpotTuneScheduler):
                          seed=seed)
         self.suggest_batch = suggest_batch
         self._search_done = False
+        self._fidelity_done = False
+
+    def on_trial_added(self, spec: TrialSpec) -> float:
+        # honor sub-sampled suggestions (TrimTuner's cheap bootstrap wave):
+        # the budget is theta * budget_frac of the full run
+        return math.floor(
+            self.theta * spec.budget_frac * spec.workload.max_trial_steps)
 
     def request_suggestions(self, views: Sequence) -> int:
         if self._phase != 1 or self._search_done:
@@ -201,3 +216,39 @@ class AdaptiveSpotTuneScheduler(SpotTuneScheduler):
     def suggestions_added(self, n: int) -> None:
         if n == 0:
             self._search_done = True
+
+    def _fidelity_promotions(self, views: Sequence) -> Dict[str, float]:
+        """Fidelity-gap scan: a sub-sampled trial whose declared LR schedule
+        (``TrialSpec.decay_steps`` — known a priori, not ground truth)
+        drops again between its observed steps and the standard θ budget
+        cannot be extrapolated — EarlyCurve has not seen the post-drop
+        stage, and the misprediction would evict the trial from the
+        shortlist before phase 2 ever ranks it.  Exactly those trials are
+        verified at the θ budget (resuming from their checkpoints, paying
+        only the delta steps); smooth single-stage curves extrapolate fine
+        and stay cheap."""
+        promotions: Dict[str, float] = {}
+        for v in views:
+            std = math.floor(self.theta * v.spec.workload.max_trial_steps)
+            if v.key in self._stopped or v.steps >= std:
+                continue
+            ds = v.spec.decay_steps()
+            if ds is not None and math.floor(v.steps / ds) < math.floor(std / ds):
+                promotions[v.key] = std
+        return promotions
+
+    def idle_fit_jobs(self, views: Sequence) -> Optional[list]:
+        if self._phase == 1 and not self._fidelity_done \
+                and self._fidelity_promotions(views):
+            # this idle resumes under-sampled trials instead of ranking —
+            # batched curve fits would be computed only to be thrown away
+            return None
+        return super().idle_fit_jobs(views)
+
+    def on_idle(self, views: Sequence) -> Dict[str, float]:
+        if self._phase == 1 and not self._fidelity_done:
+            promotions = self._fidelity_promotions(views)
+            self._fidelity_done = True
+            if promotions:
+                return promotions
+        return super().on_idle(views)

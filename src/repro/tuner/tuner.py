@@ -89,6 +89,10 @@ class Tuner:
         self._result: Optional[RunResult] = None
         self._reported: set = set()
         engine.bind(scheduler)
+        # paired policies (e.g. PBT's exploit/explore split) let the
+        # searcher read scheduler state when asked for a suggestion
+        if hasattr(searcher, "bind_scheduler"):
+            searcher.bind_scheduler(scheduler)
         n = 0
         while initial_trials is None or n < initial_trials:
             spec = searcher.suggest()
@@ -108,11 +112,16 @@ class Tuner:
     def _feed_results(self, views) -> None:
         """Stream finished-trial metrics to searchers that opted in
         (``live_results``) — the feedback adaptive searchers refine on."""
+        rich = getattr(self.searcher, "on_trial_finished", None)
         for v in views:
             if v.status == Status.FINISHED and v.key not in self._reported:
                 self._reported.add(v.key)
                 self.searcher.on_result(
                     v.key, v.metrics_vals[-1] if v.metrics_vals else None)
+                if rich is not None:
+                    # cost-aware searchers want the whole view (billed $,
+                    # steps run, fidelity) — not just the last metric
+                    rich(v)
 
     def run_cooperative(self):
         """Generator form of ``run()``: yields ``ProvisionBatch`` (engine

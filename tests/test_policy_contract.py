@@ -1,0 +1,453 @@
+"""Scheduler/Searcher conformance harness over every registered policy.
+
+The registry (``repro.tuner.registry``) is the source of truth for what
+counts as a policy; this module is the definition of done for adding one
+(docs/tuner_api.md).  Three contracts are pinned for *every* entry:
+
+  decision vocabulary   a STOP is terminal (the trial never runs, pauses,
+                        or promotes again), asynchronous promotions only
+                        ever target PAUSE'd trials, idle promotions only
+                        PAUSE'd or FINISHED ones, and successive PAUSEs of
+                        one trial happen at strictly increasing history
+                        depths (rung/milestone monotonicity)
+  preview consistency   the boundary-jumping fast path — driven by
+                        ``preview_metrics`` — emits exactly the same
+                        actionable decisions at the same steps as the
+                        exact-tick path that visits every metric crossing,
+                        while dispatching a subset of the metric events
+  searcher invariants   no duplicate configs, grid indices stay grid
+                        indices, deterministic suggestion streams, and
+                        live-feedback searchers receive ``on_result``
+                        before any post-seeding ``suggest``
+
+Fixed-seed runs always execute; ``hypothesis`` properties widen the input
+space when the library is installed (tests/_hypothesis_compat.py degrades
+them to clean skips otherwise).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.market import SpotMarket
+from repro.core.provisioner import ZeroRevPred
+from repro.core.trial import WORKLOADS, SimTrialBackend, TrialSpec
+from repro.tuner import (ASHAScheduler, DecisionKind, MetricReported,
+                         POLICY_DEFAULTS, SCHEDULERS, SEARCHERS, Scheduler,
+                         Searcher, SpotTuneScheduler, Status, Tuner,
+                         build_engine, make_scheduler, make_searcher)
+from repro.tuner.scheduler import CONTINUE, TrialView
+
+LOR = WORKLOADS[0]
+DAYS = 8.0
+# one flat knob mapping drives every factory (each picks what it knows)
+PARAMS = {"seed": 0, "theta": 0.7, "mcnt": 3, "eta": 2, "brackets": 3,
+          "population": 8, "num_samples": 8}
+
+SCHEDULER_NAMES = sorted(SCHEDULERS)
+SEARCHER_NAMES = sorted(SEARCHERS)
+
+# scheduler each searcher is exercised under (its natural driver)
+SEARCHER_PARTNER = {"grid": "spottune", "random": "spottune",
+                    "adaptive": "adaptive", "trimtuner": "adaptive",
+                    "adaptive-grid": "adaptive", "pbt": "pbt"}
+
+
+# ---------------------------------------------------------------------------
+# recording wrappers
+# ---------------------------------------------------------------------------
+
+
+class RecordingScheduler(Scheduler):
+    """Transparent scheduler proxy that logs decisions and promotions.
+
+    Deliberately does NOT define ``preview_metrics``: the engine detects
+    preview capability by method identity on the wrapper's *class*, so a
+    blanket override would force the fast path's preview machinery on for
+    schedulers that legitimately lack one.  ``wrap()`` picks the previewing
+    subclass only when the inner scheduler actually previews."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.engine = None
+        # (event type name, trial, step or None, DecisionKind, history len)
+        self.decisions = []
+        self.async_promos = []   # (key, engine Status at promotion time)
+        self.idle_promos = []
+
+    @staticmethod
+    def wrap(inner) -> "RecordingScheduler":
+        previews = (type(inner).preview_metrics
+                    is not Scheduler.preview_metrics)
+        return (_PreviewRecordingScheduler if previews
+                else RecordingScheduler)(inner)
+
+    def __getattr__(self, name):
+        if name == "_inner":
+            raise AttributeError(name)
+        return getattr(self._inner, name)
+
+    def on_trial_added(self, spec):
+        return self._inner.on_trial_added(spec)
+
+    def on_event(self, event, view):
+        d = self._inner.on_event(event, view) or CONTINUE
+        self.decisions.append((type(event).__name__, event.trial,
+                               getattr(event, "step", None), d.kind,
+                               len(view.metrics_vals)))
+        return d
+
+    def take_promotions(self):
+        promos = self._inner.take_promotions()
+        for key in promos:
+            self.async_promos.append((key, self.engine._by_key[key].status))
+        return promos
+
+    def on_idle(self, views):
+        promos = self._inner.on_idle(views)
+        for key in promos:
+            self.idle_promos.append((key, self.engine._by_key[key].status))
+        return promos
+
+    def request_suggestions(self, views):
+        return self._inner.request_suggestions(views)
+
+    def suggestions_added(self, n):
+        return self._inner.suggestions_added(n)
+
+    def idle_fit_jobs(self, views):
+        return self._inner.idle_fit_jobs(views)
+
+    def run_idle_fits(self, jobs):
+        return self._inner.run_idle_fits(jobs)
+
+    def set_idle_fits(self, preds):
+        return self._inner.set_idle_fits(preds)
+
+    def predictions(self, views):
+        return self._inner.predictions(views)
+
+    def rank(self, views):
+        return self._inner.rank(views)
+
+
+class _PreviewRecordingScheduler(RecordingScheduler):
+    def preview_metrics(self, view, steps, vals, ticks):
+        return self._inner.preview_metrics(view, steps, vals, ticks)
+
+
+class RecordingSearcher(Searcher):
+    """Transparent searcher proxy that logs the suggest/on_result order."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.calls = []          # ("suggest", key | None) / ("result", key)
+        self.suggested = []
+        self.live_results = getattr(inner, "live_results", False)
+
+    def __getattr__(self, name):
+        if name == "_inner":
+            raise AttributeError(name)
+        return getattr(self._inner, name)
+
+    def suggest(self):
+        spec = self._inner.suggest()
+        self.calls.append(("suggest", spec.key if spec else None))
+        if spec is not None:
+            self.suggested.append(spec)
+        return spec
+
+    def on_result(self, key, metric):
+        self.calls.append(("result", key))
+        return self._inner.on_result(key, metric)
+
+
+# ---------------------------------------------------------------------------
+# paired end-to-end runs (memoized: each named run is deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _paired(scheduler_name):
+    """(scheduler, searcher, initial_trials) with registry pairing applied."""
+    sched = make_scheduler(scheduler_name, LOR, PARAMS)
+    defaults = POLICY_DEFAULTS.get(scheduler_name, {})
+    searcher = make_searcher(defaults.get("searcher", "grid"), LOR, PARAMS)
+    initial = defaults.get("initial_trials")
+    if initial == "population":
+        initial = PARAMS["population"]
+    if hasattr(searcher, "_pending"):       # keep grid-backed runs small
+        searcher._pending = searcher._pending[:10]
+    return sched, searcher, initial
+
+
+_RUNS = {}
+
+
+def _run_recorded(scheduler_name, exact=False):
+    key = (scheduler_name, exact)
+    if key not in _RUNS:
+        market = SpotMarket(days=DAYS, seed=3)
+        backend = SimTrialBackend(market.pool)
+        engine = build_engine(market, backend, ZeroRevPred(), seed=0,
+                              exact_ticks=exact)
+        inner, searcher, initial = _paired(scheduler_name)
+        rec = RecordingScheduler.wrap(inner)
+        tuner = Tuner(engine, rec, searcher, initial_trials=initial)
+        rec.engine = engine
+        res = tuner.run()
+        _RUNS[key] = (rec, engine, res)
+    return _RUNS[key]
+
+
+# ---------------------------------------------------------------------------
+# registry sanity
+# ---------------------------------------------------------------------------
+
+
+def test_registry_entries_constructible():
+    for name in SCHEDULER_NAMES:
+        assert isinstance(make_scheduler(name, LOR, PARAMS), Scheduler), name
+    for name in SEARCHER_NAMES:
+        assert isinstance(make_searcher(name, LOR, PARAMS), Searcher), name
+    for sched, defaults in POLICY_DEFAULTS.items():
+        assert sched in SCHEDULERS
+        if "searcher" in defaults:
+            assert defaults["searcher"] in SEARCHERS
+    with pytest.raises(ValueError):
+        make_scheduler("nope", LOR, PARAMS)
+    with pytest.raises(ValueError):
+        make_searcher("nope", LOR, PARAMS)
+    assert set(SEARCHER_PARTNER) == set(SEARCHERS), \
+        "new searcher: add its conformance partner scheduler"
+
+
+# ---------------------------------------------------------------------------
+# decision-vocabulary invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", SCHEDULER_NAMES)
+def test_scheduler_decision_vocabulary(name):
+    rec, engine, res = _run_recorded(name)
+    assert res is not None and res.cost > 0
+
+    # a STOP is terminal: no further running-life events (starts, metric
+    # reports, notices) and no further actionable decisions for that trial
+    stopped = set()
+    pause_depth = {}
+    for ev, key, step, kind, hist in rec.decisions:
+        if key in stopped:
+            assert ev == "TrialFinished", \
+                f"{name}: {ev} dispatched for {key} after STOP"
+            assert kind == DecisionKind.CONTINUE, \
+                f"{name}: actionable {kind} for {key} after STOP"
+        if kind == DecisionKind.STOP:
+            assert key not in stopped, f"{name}: double STOP for {key}"
+            stopped.add(key)
+        elif kind == DecisionKind.PAUSE:
+            # rung/milestone monotonicity: a resumed trial pauses again only
+            # deeper into its metric history.  A metric-crossing PAUSE is
+            # strictly deeper; a revocation-park may legitimately re-park a
+            # just-promoted trial at the same depth (the rollback landed it
+            # back on the checkpoint it was parked on), so only regression
+            # is forbidden there.
+            prev = pause_depth.get(key, -1)
+            if ev == "TrialRevoked":
+                assert prev <= hist, \
+                    f"{name}: {key} revocation-parked shallower ({hist}<{prev})"
+            else:
+                assert prev < hist, \
+                    f"{name}: {key} paused at depth {hist} twice"
+            pause_depth[key] = hist
+
+    # promotions: async ones resume parked trials; idle ones may also raise
+    # the budget of finished trials (the paper's phase-2 promotion)
+    for key, status in rec.async_promos:
+        assert status == Status.PAUSED, \
+            f"{name}: async promotion of {key} in status {status}"
+        assert key not in stopped, f"{name}: promoted stopped trial {key}"
+    for key, status in rec.idle_promos:
+        assert status in (Status.PAUSED, Status.FINISHED), \
+            f"{name}: idle promotion of {key} in status {status}"
+        assert key not in stopped, f"{name}: promoted stopped trial {key}"
+
+    # stopped trials really finished; a drained engine parks or finishes all
+    for st in engine.states:
+        assert st.status in (Status.FINISHED, Status.PAUSED), \
+            f"{name}: {st.key} left {st.status}"
+        if st.key in stopped:
+            assert st.status == Status.FINISHED and st.stopped
+
+    # milestone ladders (where a policy exposes one) are strictly ascending
+    for ladder_attr in ("rungs", "milestones"):
+        ladder = getattr(rec._inner, ladder_attr, None)
+        if ladder:
+            assert list(ladder) == sorted(set(ladder)), (name, ladder_attr)
+    for bracket in getattr(rec._inner, "brackets", []):
+        assert list(bracket.rungs) == sorted(set(bracket.rungs)), name
+
+    # ranking covers exactly the suggested trials
+    assert set(res.predicted_rank) == {st.key for st in engine.states}
+
+
+# ---------------------------------------------------------------------------
+# preview_metrics consistency: fast path == exact path, decision for decision
+# ---------------------------------------------------------------------------
+
+
+def _actionable(rec):
+    return [(key, ev, step, kind)
+            for ev, key, step, kind, _ in rec.decisions
+            if kind != DecisionKind.CONTINUE]
+
+
+def _metric_dispatches(rec):
+    return [(key, step) for ev, key, step, _, _ in rec.decisions
+            if ev == "MetricReported"]
+
+
+@pytest.mark.parametrize("name", SCHEDULER_NAMES)
+def test_preview_consistent_with_exact_dispatch(name):
+    rec_fast, eng_fast, _ = _run_recorded(name, exact=False)
+    rec_exact, eng_exact, _ = _run_recorded(name, exact=True)
+
+    # the previewed crossings the fast path jumps to produce exactly the
+    # decisions the exact path reaches by visiting every crossing
+    assert _actionable(rec_fast) == _actionable(rec_exact), name
+    assert eng_fast.market.billed == eng_exact.market.billed, name
+
+    fast_m, exact_m = _metric_dispatches(rec_fast), _metric_dispatches(rec_exact)
+    assert set(fast_m) <= set(exact_m), \
+        f"{name}: fast path dispatched a point the exact path never saw"
+    if type(rec_fast._inner).preview_metrics is not Scheduler.preview_metrics:
+        # a previewing scheduler must actually let the engine skip inert
+        # points — otherwise the fast path silently degraded to visit-all
+        assert len(fast_m) < len(exact_m), \
+            f"{name}: preview_metrics never skipped a crossing"
+
+    # trial histories are complete on both paths (silent appends included)
+    hist_fast = {s.key: (s.metrics_steps, s.metrics_vals)
+                 for s in eng_fast.states}
+    hist_exact = {s.key: (s.metrics_steps, s.metrics_vals)
+                  for s in eng_exact.states}
+    assert hist_fast == hist_exact, name
+
+
+# ---------------------------------------------------------------------------
+# searcher invariants
+# ---------------------------------------------------------------------------
+
+
+def _run_searcher(searcher_name):
+    partner = SEARCHER_PARTNER[searcher_name]
+    sched, _, initial = _paired(partner)
+    searcher = RecordingSearcher(make_searcher(searcher_name, LOR, PARAMS))
+    if hasattr(searcher._inner, "_pending"):
+        searcher._inner._pending = searcher._inner._pending[:10]
+    market = SpotMarket(days=DAYS, seed=3)
+    backend = SimTrialBackend(market.pool)
+    engine = build_engine(market, backend, ZeroRevPred(), seed=0)
+    if initial == "population":
+        initial = PARAMS["population"]
+    res = Tuner(engine, sched, searcher, initial_trials=initial).run()
+    return searcher, engine, res, initial
+
+
+@pytest.mark.parametrize("name", SEARCHER_NAMES)
+def test_searcher_contract(name):
+    rec, engine, res, initial = _run_searcher(name)
+    grid = LOR.hp_grid()
+
+    # no duplicate configs, and grid indices stay grid indices (the
+    # simulated ground truth must remain the same function of HP)
+    keys = [s.key for s in rec.suggested]
+    assert len(set(keys)) == len(keys), f"{name}: duplicate suggestion"
+    for spec in rec.suggested:
+        assert grid[spec.idx] == spec.hp, f"{name}: idx/hp mismatch"
+
+    # deterministic: an identical run suggests the identical stream
+    rec2, _, _, _ = _run_searcher(name)
+    assert [s.key for s in rec2.suggested] == keys, f"{name}: nondeterministic"
+
+    # live-feedback searchers: every post-seeding suggest happens after at
+    # least one on_result (the Tuner feeds results before requesting more)
+    if rec.live_results and initial is not None:
+        first_result = next((i for i, (c, _) in enumerate(rec.calls)
+                             if c == "result"), None)
+        before = [c for c, _ in rec.calls[:first_result or len(rec.calls)]
+                  if c == "suggest"]
+        assert len(before) <= initial, \
+            f"{name}: suggested past the seed wave before any feedback"
+
+
+# ---------------------------------------------------------------------------
+# property-based widenings (auto-skip without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.2, 3.0), min_size=0, max_size=10),
+       st.lists(st.floats(0.2, 3.0), min_size=1, max_size=10))
+@settings(max_examples=30, deadline=None)
+def test_spottune_preview_matches_sequential_dispatch(hist, future):
+    """``preview_metrics`` must flag exactly the point whose one-by-one
+    dispatch would first return STOP (points on distinct ticks)."""
+    w = LOR
+    spec = TrialSpec(w, w.hp_grid()[0], 0)
+
+    def fresh_view():
+        v = TrialView(spec, target_steps=w.max_trial_steps)
+        v.metrics_steps = [(i + 1) * w.val_every for i in range(len(hist))]
+        v.metrics_vals = list(hist)
+        return v
+
+    steps = [(len(hist) + i + 1) * w.val_every for i in range(len(future))]
+    ticks = np.arange(1, len(future) + 1)
+
+    sched = SpotTuneScheduler(theta=0.7, mcnt=3, seed=0)
+    idx = sched.preview_metrics(fresh_view(), steps, future, ticks)
+
+    ref = SpotTuneScheduler(theta=0.7, mcnt=3, seed=0)
+    view = fresh_view()
+    expected = None
+    for j, (s, v) in enumerate(zip(steps, future)):
+        view.metrics_steps.append(s)
+        view.metrics_vals.append(v)
+        d = ref.on_event(MetricReported(0.0, spec.key, s, v), view)
+        if d.kind != DecisionKind.CONTINUE:
+            expected = j
+            break
+    assert idx == expected
+
+
+@given(st.integers(0, 4), st.integers(1, 50), st.integers(1, 20))
+@settings(max_examples=30, deadline=None)
+def test_asha_preview_flags_first_rung_crossing(rung_pos, start, count):
+    sched = ASHAScheduler(eta=2, num_rungs=3)
+    spec = TrialSpec(LOR, LOR.hp_grid()[0], 0)
+    sched.on_trial_added(spec)
+    i = min(rung_pos, len(sched.rungs))
+    sched._rung_idx[spec.key] = i
+    view = TrialView(spec, target_steps=LOR.max_trial_steps)
+    steps = np.arange(start, start + count) * LOR.val_every
+    got = sched.preview_metrics(view, steps, np.ones(count), np.arange(count))
+    if i >= len(sched.rungs):
+        assert got is None
+    else:
+        hits = [j for j, s in enumerate(steps) if s >= sched.rungs[i]]
+        assert got == (hits[0] if hits else None)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_hyperband_bracket_assignment_deterministic(seed):
+    from repro.tuner import HyperbandScheduler
+    from repro.core.trial import make_trials
+
+    a = HyperbandScheduler(eta=2, num_brackets=3, seed=seed)
+    b = HyperbandScheduler(eta=2, num_brackets=3, seed=seed)
+    for spec in make_trials(LOR):
+        assert a.on_trial_added(spec) == b.on_trial_added(spec)
+    assert a._bracket_of == b._bracket_of
+    assert len(a.brackets) == 3
+    # budget-proportional: cheaper (more aggressive) brackets weigh more
+    assert all(x >= y for x, y in zip(a._weights, a._weights[1:]))

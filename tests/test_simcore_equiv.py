@@ -17,10 +17,25 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.revpred import OracleRevPred
 from repro.core.trial import WORKLOADS
-from repro.tuner import ASHAScheduler
+from repro.tuner import (AdaptiveSpotTuneScheduler, ASHAScheduler,
+                         HyperbandScheduler, PBTScheduler, PBTSearcher,
+                         TrimTunerSearcher)
 from repro.tuner.equivalence import compare_runs
 
 LOR = WORKLOADS[0]
+
+
+def _hyperband_kw():
+    return dict(
+        scheduler_factory=lambda: HyperbandScheduler(eta=2, num_brackets=3,
+                                                     seed=0))
+
+
+def _pbt_kw():
+    return dict(
+        scheduler_factory=lambda: PBTScheduler(population=8, seed=0),
+        searcher_factory=lambda w: PBTSearcher(w, population=8, seed=0),
+        initial_trials=8)
 
 
 @pytest.mark.parametrize("market_seed", [1, 3, 7, 11, 23])
@@ -53,6 +68,47 @@ def test_fast_equals_exact_asha_pause_promote():
     """ASHA exercises PAUSE decisions, async promotions, and idle resumes."""
     diffs = compare_runs(LOR, days=8.0,
                          scheduler_factory=lambda: ASHAScheduler(eta=2))
+    assert not diffs, "\n".join(diffs)
+
+
+@pytest.mark.parametrize("market_seed", [1, 3, 7, 11, 23])
+def test_fast_equals_exact_hyperband_across_market_seeds(market_seed):
+    """Hyperband routes events through per-bracket ASHA ladders; the
+    fast path's rung previews must stay equivalent under every bracket."""
+    diffs = compare_runs(LOR, market_seed=market_seed, days=8.0,
+                         **_hyperband_kw())
+    assert not diffs, "\n".join(diffs)
+
+
+@pytest.mark.parametrize("workload", WORKLOADS[1:4], ids=lambda w: w.name)
+def test_fast_equals_exact_hyperband_across_workloads(workload):
+    diffs = compare_runs(workload, days=8.0, n_trials=8, **_hyperband_kw())
+    assert not diffs, "\n".join(diffs)
+
+
+@pytest.mark.parametrize("market_seed", [1, 3, 7, 11, 23])
+def test_fast_equals_exact_pbt_across_market_seeds(market_seed):
+    """PBT adds milestone PAUSEs, promotions of parked members, and
+    idle-path exploit/explore replacements on top of the engine."""
+    diffs = compare_runs(LOR, market_seed=market_seed, days=8.0, **_pbt_kw())
+    assert not diffs, "\n".join(diffs)
+
+
+@pytest.mark.parametrize("workload", WORKLOADS[1:4], ids=lambda w: w.name)
+def test_fast_equals_exact_pbt_across_workloads(workload):
+    diffs = compare_runs(workload, days=8.0, **_pbt_kw())
+    assert not diffs, "\n".join(diffs)
+
+
+def test_fast_equals_exact_trimtuner_bo():
+    """Cost-aware BO feeds on per-trial billed cost; both paths must hand
+    the searcher identical feedback and replay identical suggestions."""
+    diffs = compare_runs(
+        LOR, days=8.0,
+        scheduler_factory=lambda: AdaptiveSpotTuneScheduler(theta=0.7,
+                                                            mcnt=3, seed=0),
+        searcher_factory=lambda w: TrimTunerSearcher(w, seed=0),
+        initial_trials=6)
     assert not diffs, "\n".join(diffs)
 
 

@@ -80,6 +80,62 @@ def test_sequential_cold_matches_warm_outcomes():
                           cold.replicas[0].result)
 
 
+def _policy_suite_grid():
+    """One replica per new policy (ISSUE 4): Hyperband brackets, PBT
+    exploit/explore, TrimTuner cost-aware BO — all through ScenarioSpec."""
+    specs = scenario_grid(["LoR"], [1, 3], days=DAYS, scheduler="hyperband",
+                          eta=2, revpred="zero", n_trials=8)
+    specs += scenario_grid(["SVM"], [2], days=DAYS, scheduler="pbt",
+                           revpred="zero")
+    specs += scenario_grid(["GBTR"], [4], days=DAYS, scheduler="adaptive",
+                           searcher="trimtuner", initial_trials=6,
+                           revpred="zero")
+    return specs
+
+
+def test_new_policy_sweep_batched_matches_sequential():
+    """Hyperband / PBT / TrimTuner-BO replicas interleave with cross-replica
+    batching and stay bit-identical to isolated sequential runs."""
+    specs = _policy_suite_grid()
+    runner = SweepRunner()
+    batched = runner.run(specs)
+    seq = runner.run_sequential(specs)
+    for b, s in zip(batched.replicas, seq.replicas):
+        _assert_replica_equal(b.spec, b.result, s.result)
+        assert b.metrics == s.metrics
+
+
+def test_pbt_spec_defaults_pair_searcher_and_population():
+    """A bare pbt spec resolves to its explore searcher and population-sized
+    initial wave (registry POLICY_DEFAULTS), and replacements beyond the
+    initial population actually happen."""
+    from repro.sweep import resolve_policy
+
+    spec = ScenarioSpec(workload="LoR", market_seed=2, scheduler="pbt",
+                        population=6, days=DAYS, revpred="zero")
+    assert resolve_policy(spec) == ("pbt", "pbt", 6)
+    res = SweepRunner().run([spec])
+    r = res.replicas[0].result
+    assert len(r.per_trial_steps) > 6      # exploit/explore replacements ran
+
+
+def test_trained_revpred_new_policy_sweep_matches():
+    """Trained-predictor scenario for a new policy: the cross-replica
+    stacked RevPred forward stays row-stable under Hyperband's bracketed
+    pause/promote traffic."""
+    specs = scenario_grid(["LoR"], [1], days=3.0, scheduler="hyperband",
+                          eta=2, revpred="logreg", n_trials=6)
+    specs += scenario_grid(["LiR"], [1], days=3.0, scheduler="pbt",
+                           population=6, revpred="logreg")
+    runner = SweepRunner(train_minutes=1000, revpred_epochs=1,
+                         revpred_stride=30)
+    batched = runner.run(specs)
+    seq = runner.run_sequential(specs)
+    for b, s in zip(batched.replicas, seq.replicas):
+        _assert_replica_equal(b.spec, b.result, s.result)
+        assert b.metrics == s.metrics
+
+
 def test_trained_predictor_sweep_batched_forward_matches():
     """Cross-replica stacked RevPred forwards (logreg: fast to train) are
     row-stable: batched sweep == sequential, trained predictors shared by
