@@ -18,18 +18,24 @@ pinned by tests/test_policy_contract.py):
   adaptive   θ-budget policy over TrimTuner cost-aware BO (sub-sampled
              bootstrap wave, EI-per-cost acquisition) on the
              incremental-suggestion path
+  trimtuner-gp  the same θ-budget policy over the GP continuous
+             relaxation: Matérn-5/2 posterior on the *continuous variant*
+             of the workload's search space (typed domains, grid-free
+             trial identity), EI-per-dollar optimized by seeded random +
+             incumbent local search
 """
 
 from __future__ import annotations
 
 from benchmarks.common import Timer, build_tuner, fresh_market
 from repro.core.provisioner import ZeroRevPred
-from repro.core.trial import WORKLOADS, SimTrialBackend
+from repro.core.trial import WORKLOADS, SimTrialBackend, continuous_variant
 from repro.tuner import (AdaptiveSpotTuneScheduler, ASHAScheduler,
                          GridSearcher, HyperbandScheduler, PBTScheduler,
-                         PBTSearcher, SpotTuneScheduler, TrimTunerSearcher)
+                         PBTSearcher, SpotTuneScheduler, TrimTunerGPSearcher,
+                         TrimTunerSearcher)
 
-RATIO_POLICIES = ("asha", "hyperband", "pbt", "adaptive")
+RATIO_POLICIES = ("asha", "hyperband", "pbt", "adaptive", "trimtuner-gp")
 
 
 def _policies(w, seed):
@@ -44,6 +50,11 @@ def _policies(w, seed):
            AdaptiveSpotTuneScheduler(theta=0.7, mcnt=3, seed=seed,
                                      suggest_batch=4),
            TrimTunerSearcher(w, initial=6, batch=3, seed=seed), 6)
+    yield ("trimtuner-gp",
+           AdaptiveSpotTuneScheduler(theta=0.7, mcnt=3, seed=seed,
+                                     suggest_batch=4),
+           TrimTunerGPSearcher(continuous_variant(w), initial=6, batch=3,
+                               seed=seed), 6)
 
 
 def run(workloads=None, seed: int = 0):

@@ -191,7 +191,8 @@ def run_fig8(workloads, seeds, runner,
 # search-policy suite: ASHA / Hyperband / PBT / TrimTuner-BO vs the grid
 # ---------------------------------------------------------------------------
 
-POLICY_TAGS = ("spottune", "asha", "hyperband", "pbt", "adaptive")
+POLICY_TAGS = ("spottune", "asha", "hyperband", "pbt", "adaptive",
+               "trimtuner-gp")
 
 
 def run_asha(workloads, seeds, runner) -> List[str]:
@@ -207,6 +208,12 @@ def run_asha(workloads, seeds, runner) -> List[str]:
     specs += scenario_grid(names, seeds, revpred="zero", days=MARKET_DAYS,
                            scheduler="adaptive", searcher="trimtuner",
                            initial_trials=6, tag="adaptive")
+    # the GP relaxation searches the *continuous variant* of each space —
+    # grid-free trial identity, ground truth interpolated between anchors
+    specs += scenario_grid(names, seeds, revpred="zero", days=MARKET_DAYS,
+                           scheduler="adaptive", searcher="trimtuner-gp",
+                           initial_trials=6, space="continuous",
+                           tag="trimtuner-gp")
     res = runner.run(specs)
     body = []
     for tag in POLICY_TAGS:
@@ -229,15 +236,71 @@ def run_asha(workloads, seeds, runner) -> List[str]:
     return [f"## search-policy suite vs the paper's grid policy "
             f"(n={len(seeds)} seeds, {len(workloads)} workloads)", "",
             "ASHA, Hyperband (3 brackets), PBT (population 8, truncation",
-            "selection via PAUSE/PROMOTE), and TrimTuner cost-aware BO",
-            "(`adaptive`) on the identical transient engine; best metric =",
-            "lowest final validation loss any trial of the replica reached.",
+            "selection via PAUSE/PROMOTE), TrimTuner cost-aware BO",
+            "(`adaptive`), and its GP continuous relaxation",
+            "(`trimtuner-gp`, Matérn-5/2 posterior over the continuous",
+            "variant of each search space) on the identical transient",
+            "engine; best metric = lowest final validation loss any trial",
+            "of the replica reached.",
             "",
             markdown_table(["policy", "total cost [$]", "mean JCT [h]",
                             "top-3 acc", "best metric", "mean trials", "n"],
                            body), "",
             markdown_table(["metric", "mean ± 95% CI", "n"],
                            [(n, s.fmt(3), s.n) for n, s in ratios]), ""]
+
+
+# ---------------------------------------------------------------------------
+# variance decomposition: market-seed vs HP-randomness components
+# ---------------------------------------------------------------------------
+
+
+def run_decompose(workloads, seeds, runner,
+                  hp_seeds=(0, 1, 2)) -> List[str]:
+    """Per-workload one-way variance decomposition of replica cost over
+    the (market seed x HP seed) grid.
+
+    The policy is the θ-budget `adaptive` (TrimTuner) pair — its searcher
+    seed (`engine_seed`) randomizes the bootstrap design, giving an HP-
+    randomness axis the deterministic grid policies lack.  Components are
+    the standard one-way ANOVA split with market seed as the factor:
+    between = variance of per-market-seed means (spot-price realization),
+    within = mean per-market-seed variance (HP search randomness); shares
+    are of their sum."""
+    names = [w.name for w in workloads]
+    specs = scenario_grid(names, seeds, revpred="zero", days=MARKET_DAYS,
+                          scheduler="adaptive", searcher="trimtuner",
+                          initial_trials=6, engine_seed=list(hp_seeds))
+    res = runner.run(specs)
+    body = []
+    for wname in names:
+        cells: Dict[int, List[float]] = {}
+        for rep in res.replicas:
+            if rep.spec.workload != wname:
+                continue
+            cells.setdefault(rep.spec.market_seed, []).append(rep.result.cost)
+        groups = [vals for _, vals in sorted(cells.items())]
+        grand = [v for g in groups for v in g]
+        mean = sum(grand) / len(grand)
+        between = sum(len(g) * (sum(g) / len(g) - mean) ** 2
+                      for g in groups) / max(len(grand) - 1, 1)
+        within = sum((v - sum(g) / len(g)) ** 2
+                     for g in groups for v in g) / max(len(grand) - 1, 1)
+        total = between + within
+        body.append((wname, f"{mean:.2f}", f"{between:.3f}", f"{within:.3f}",
+                     f"{100 * between / max(total, 1e-12):.1f}%",
+                     f"{100 * within / max(total, 1e-12):.1f}%",
+                     len(grand)))
+    return [f"## variance decomposition — market seed vs HP randomness "
+            f"(n={len(seeds)} market seeds x {len(hp_seeds)} HP seeds, "
+            "adaptive policy)", "",
+            "One-way decomposition of per-replica cost with market seed as",
+            "the factor: *between* = spot-price realization component,",
+            "*within* = HP-search randomness (TrimTuner bootstrap design",
+            "seed) at a fixed market.  Shares are of between+within.", "",
+            markdown_table(["workload", "mean cost [$]", "between (market)",
+                            "within (HP)", "market share", "HP share", "n"],
+                           body), ""]
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +315,10 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma list from: fig7, fig8, asha "
                          "(fig7 includes fig9)")
+    ap.add_argument("--decompose", action="store_true",
+                    help="append the per-workload market-vs-HP variance "
+                         "decomposition section (runs an extra "
+                         "market x HP seed grid)")
     ap.add_argument("--out", default="EXPERIMENTS.md")
     args = ap.parse_args(argv)
 
@@ -273,7 +340,8 @@ def main(argv=None) -> None:
         "the figure's suite.  Regenerate with:",
         "", "```",
         f"PYTHONPATH=src:. python -m benchmarks.sweep_experiments "
-        f"--seeds {n_seeds}" + (" --quick" if args.quick else ""),
+        f"--seeds {n_seeds}" + (" --quick" if args.quick else "")
+        + (" --decompose" if args.decompose else ""),
         "```", "",
         "The synthetic markets are less volatile than the paper's 2016-17",
         "AWS dumps, so refund fractions sit below the paper's 77.5%; the",
@@ -290,6 +358,10 @@ def main(argv=None) -> None:
     if "asha" in only:
         sections += run_asha(workloads, seeds, runner)
         print(f"# asha done at {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+    if args.decompose:
+        sections += run_decompose(workloads, seeds, runner)
+        print(f"# decompose done at {time.perf_counter()-t0:.1f}s",
               file=sys.stderr)
     sections.append(f"_Generated in {time.perf_counter()-t0:.0f}s wall._")
     with open(args.out, "w") as fh:

@@ -1,8 +1,13 @@
-"""Trials, HP grids, and the simulated workload suite (paper Table II).
+"""Trials, search spaces, and the simulated workload suite (paper Table II).
 
-A *workload* is one ML algorithm + dataset with a 16-point HP grid (2⁴, as in
-the paper); a *trial* is one HP setting.  The simulation backend provides,
-per trial:
+A *workload* is one ML algorithm + dataset with a hyper-parameter search
+space; a *trial* is one HP setting.  The paper's workloads use 16-point
+grids (2⁴ Ordinal dims); ``Workload.space`` exposes the typed
+``repro.tuner.space.SearchSpace`` behind ``hp_space`` (legacy tuple dims map
+to ``Ordinal``; explicit ``Domain`` objects — ``Uniform``, ``LogUniform``,
+``IntUniform``, ``Choice`` — are passed through, and
+``continuous_variant`` relaxes a grid workload into them).  The simulation
+backend provides, per trial:
 
   * ground-truth seconds/step per instance type — sub-linear chip scaling
     with per-(workload, instance) idiosyncrasies, reproducing the paper's
@@ -12,8 +17,11 @@ per trial:
     the structure EarlyCurve exists to capture (and SLAQ misses);
   * a model size (bytes) for checkpoint-time accounting.
 
-The quality ranking across the grid is a deterministic function of the HPs
-(seeded), so EarlyCurve's top-k selection accuracy is measurable.
+The quality ranking across the space is a deterministic function of the HPs
+(seeded), so EarlyCurve's top-k selection accuracy is measurable.  Off the
+anchor lattice (continuous suggestions), ground truth is the multilinear
+interpolation of the per-anchor curves in the space's encoded ``[0,1]^d``
+coordinates — smooth between lattice points, bit-exact on them.
 
 ``RealTrialBackend`` (launch/train.py) swaps in actual JAX training for the
 end-to-end example; the orchestrator is agnostic.
@@ -22,7 +30,7 @@ end-to-end example; the orchestrator is agnostic.
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import functools
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -30,10 +38,21 @@ import numpy as np
 from repro.core.market import InstanceType, stable_hash
 
 
+@functools.lru_cache(maxsize=None)
+def _space_of(hp_space: tuple):
+    # deferred import: repro.tuner.space is dependency-free, but importing
+    # it at module scope would cycle through repro.tuner.__init__ -> engine
+    # -> this module
+    from repro.tuner.space import SearchSpace
+    return SearchSpace.from_legacy(hp_space)
+
+
 @dataclasses.dataclass(frozen=True)
 class Workload:
     name: str
-    hp_space: tuple                  # tuple of (key, (values...))
+    # tuple of (key, (values...)) legacy dims and/or (key, Domain) typed
+    # domains — ``space`` normalizes both into a SearchSpace
+    hp_space: tuple
     max_trial_steps: int
     val_every: int                   # steps between metric points
     s0: float                        # secs/step on the 8-chip reference slice
@@ -42,10 +61,15 @@ class Workload:
     metric: str = "val_loss"
     seed: int = 0
 
+    @property
+    def space(self):
+        """The typed SearchSpace behind ``hp_space`` (memoized)."""
+        return _space_of(self.hp_space)
+
     def hp_grid(self) -> List[dict]:
-        keys = [k for k, _ in self.hp_space]
-        vals = [v for _, v in self.hp_space]
-        return [dict(zip(keys, combo)) for combo in itertools.product(*vals)]
+        """Legacy enumeration shim: the space's grid, bit-exact with the
+        old itertools.product order.  Raises for continuous spaces."""
+        return self.space.grid()
 
 
 # The six paper benchmarks (Table II), with step-time/size scales adapted to
@@ -80,20 +104,80 @@ WORKLOADS = [
 ]
 
 
+def continuous_variant(w: Workload, suffix: str = "~c") -> Workload:
+    """Relax a grid workload's finite dims into continuous domains.
+
+    Numeric 2-value dims span their min..max: integer dims become
+    ``IntUniform``, positive floats spanning close to a decade or more
+    (``hi/lo >= 8``) ``LogUniform`` (learning rates), other floats
+    ``Uniform``.  Non-numeric dims stay ``Choice``.  Each relaxed domain
+    keeps the original values as its anchors *in declared order*, so the
+    variant's anchor lattice enumerates exactly like the base grid
+    (``space.anchor_grid() == base.hp_grid()``) and the seeded anchor
+    curves are bit-identical to the base workload's — ground truth
+    interpolates between the very surface the grid policies search.  The
+    name suffix keeps trial keys and memo caches disjoint from the base
+    workload's."""
+    from repro.tuner.space import (Choice, Domain, IntUniform, LogUniform,
+                                   Uniform)
+
+    dims = []
+    for key, values in w.hp_space:
+        if isinstance(values, Domain):
+            dims.append((key, values))
+            continue
+        vals = list(values)
+        numeric = all(isinstance(v, (int, float))
+                      and not isinstance(v, bool) for v in vals)
+        if not numeric or len(set(vals)) < 2:
+            dims.append((key, Choice(tuple(vals))))
+            continue
+        lo, hi = min(vals), max(vals)
+        if all(float(v).is_integer() for v in vals):
+            dims.append((key, IntUniform(
+                int(lo), int(hi), anchors=tuple(int(v) for v in vals))))
+        elif lo > 0 and hi / lo >= 8.0:
+            dims.append((key, LogUniform(
+                float(lo), float(hi),
+                anchors=tuple(float(v) for v in vals))))
+        else:
+            dims.append((key, Uniform(
+                float(lo), float(hi),
+                anchors=tuple(float(v) for v in vals))))
+    return dataclasses.replace(w, name=w.name + suffix,
+                               hp_space=tuple(dims))
+
+
 @dataclasses.dataclass
 class TrialSpec:
     workload: Workload
     hp: dict
-    idx: int
+    # anchor-lattice index when the config sits on the workload grid (the
+    # legacy positional identity, kept so grid trial keys/ground-truth stay
+    # bit-exact); ``GRID_FREE`` for configs identified by hash alone —
+    # continuous suggestions, whose key derives from ``space.config_key``
+    idx: int = -1
     # fraction of the workload's full budget this suggestion asks for; <1 is
     # a sub-sampled cheap evaluation (TrimTuner-style) — honored by
     # schedulers whose on_trial_added consults it, ignored by the rest
     budget_frac: float = 1.0
 
+    GRID_FREE = -1
+
     def __post_init__(self):
         # cached: the key is read on every perf-matrix/curve lookup in the
         # simulation hot loop (specs are never re-pointed after construction)
-        self.key = f"{self.workload.name}/hp{self.idx:02d}"
+        if self.idx >= 0:
+            self.key = f"{self.workload.name}/hp{self.idx:02d}"
+        else:
+            self.key = (f"{self.workload.name}"
+                        f"/cfg{self.workload.space.config_key(self.hp)}")
+
+    @property
+    def config_hash(self) -> int:
+        """Space-level identity: equal for equal configs regardless of how
+        (grid index vs continuous suggestion) the config was produced."""
+        return self.workload.space.config_hash(self.hp)
 
     def decay_steps(self) -> Optional[int]:
         """Steps between the *declared* LR-decay boundaries of this config
@@ -181,6 +265,8 @@ class SimTrialBackend:
         self._curve_cache: Dict[str, np.ndarray] = {}
         self._curve_list_cache: Dict[str, list] = {}
         self._base_cache: Dict[tuple, float] = {}
+        self._anchor_specs: Dict[tuple, TrialSpec] = {}
+        self._anchor_grids: Dict[Workload, list] = {}
 
     # ----------------------------------------------------------- step times
     def step_time(self, trial: TrialSpec, inst: InstanceType,
@@ -258,7 +344,14 @@ class SimTrialBackend:
         return trial.decay_steps()
 
     def curve(self, trial: TrialSpec) -> np.ndarray:
-        """Validation-loss value at every val_every step grid point."""
+        """Validation-loss value at every val_every step grid point.
+
+        Anchor-lattice trials (``idx >= 0``) evaluate the staged synthetic
+        curve generator exactly as before; grid-free configs (continuous
+        suggestions, ``idx < 0``) get the multilinear interpolation of the
+        anchor curves in encoded coordinates — a smooth deterministic
+        function of the config that coincides with the legacy curves on
+        every lattice point."""
         if trial.key in self._curve_cache:
             return self._curve_cache[trial.key]
         gkey = _spec_key(trial)
@@ -268,6 +361,16 @@ class SimTrialBackend:
             self._curve_cache[trial.key] = arr
             self._curve_list_cache[trial.key] = lst
             return arr
+        vals = (self._grid_curve(trial) if trial.idx >= 0
+                else self._interp_curve(trial))
+        lst = vals.tolist()       # python floats for the metric hot path
+        _CURVE_CACHE[gkey] = (vals, lst)
+        self._curve_cache[trial.key] = vals
+        self._curve_list_cache[trial.key] = lst
+        return vals
+
+    def _grid_curve(self, trial: TrialSpec) -> np.ndarray:
+        """The staged synthetic curve of one anchor-lattice config."""
         w = trial.workload
         grid = np.arange(w.val_every, w.max_trial_steps + 1, w.val_every)
         L_inf = self.final_loss(trial)
@@ -299,12 +402,67 @@ class SimTrialBackend:
                     # next stage opens with a sharp drop: new 'level' is the
                     # post-drop starting point (zeta ~ 0.55 > xi=0.5)
         noise = rng.normal(0, 0.0015, size=len(grid)) * vals
-        vals = np.maximum(vals + noise, 0.01)
-        lst = vals.tolist()       # python floats for the metric hot path
-        _CURVE_CACHE[gkey] = (vals, lst)
-        self._curve_cache[trial.key] = vals
-        self._curve_list_cache[trial.key] = lst
-        return vals
+        return np.maximum(vals + noise, 0.01)
+
+    # ---- grid-free ground truth: anchor-lattice interpolation
+
+    def _anchor_spec(self, w: Workload, idx: int) -> TrialSpec:
+        key = (w, idx)
+        spec = self._anchor_specs.get(key)
+        if spec is None:
+            grid = self._anchor_grids.get(w)
+            if grid is None:
+                grid = self._anchor_grids[w] = w.space.anchor_grid()
+            spec = self._anchor_specs[key] = TrialSpec(w, grid[idx], idx)
+        return spec
+
+    @staticmethod
+    def _hat_weights(u: float, enc: List[float]) -> List[tuple]:
+        """Piecewise-linear hat weights of ``u`` over the (strictly
+        increasing) encoded anchor positions — at most two nonzero."""
+        if u <= enc[0]:
+            return [(0, 1.0)]
+        if u >= enc[-1]:
+            return [(len(enc) - 1, 1.0)]
+        j = int(np.searchsorted(enc, u, side="right")) - 1
+        if u == enc[j]:
+            return [(j, 1.0)]
+        t = (u - enc[j]) / (enc[j + 1] - enc[j])
+        return [(j, 1.0 - t), (j + 1, t)]
+
+    def _interp_curve(self, trial: TrialSpec) -> np.ndarray:
+        """Multilinear interpolation of the anchor curves at the trial's
+        encoded coordinates.  Exact on lattice points (weights degenerate
+        to a single 1.0), smooth in every continuous dim between them.
+        Anchor values keep their *declared* order (so anchor product
+        indices — and the seeded anchor curves — match the base grid of a
+        ``continuous_variant``); the hat-weight scan sorts the encoded
+        positions and maps back."""
+        w = trial.workload
+        space = w.space
+        per_dim: List[List[tuple]] = []
+        for k, d in space.dims:
+            pairs = sorted((d.encode(a), j)
+                           for j, a in enumerate(d.anchor_values()))
+            enc = [e for e, _ in pairs]
+            pos = [j for _, j in pairs]
+            hats = self._hat_weights(d.encode(trial.hp[k]), enc)
+            per_dim.append([(pos[i], wt) for i, wt in hats])
+        radices = [len(d.anchor_values()) for _, d in space.dims]
+        out: Optional[np.ndarray] = None
+        stack = [(0, 0, 1.0)]           # (dim, partial corner index, weight)
+        while stack:
+            dim, idx, wgt = stack.pop()
+            if dim == len(per_dim):
+                corner = self.curve(self._anchor_spec(w, idx))
+                if wgt == 1.0:
+                    return corner.copy()
+                term = wgt * corner
+                out = term if out is None else out + term
+                continue
+            for j, wj in per_dim[dim]:
+                stack.append((dim + 1, idx * radices[dim] + j, wgt * wj))
+        return out
 
     def metric_at(self, trial: TrialSpec, step: int) -> Optional[float]:
         w = trial.workload

@@ -18,7 +18,8 @@ from typing import Dict, Iterable, List, Optional, Union
 from repro.core.market import SpotMarket
 from repro.core.provisioner import ZeroRevPred
 from repro.core.revpred import OracleRevPred, RevPred
-from repro.core.trial import WORKLOADS, SimTrialBackend, Workload
+from repro.core.trial import (WORKLOADS, SimTrialBackend, Workload,
+                              continuous_variant)
 from repro.tuner import (POLICY_DEFAULTS, Scheduler, Searcher, Tuner,
                          build_engine, make_scheduler, make_searcher)
 
@@ -40,9 +41,10 @@ class ScenarioSpec:
     brackets: int = 3                    # hyperband bracket count
     population: int = 8                  # pbt population size
     # any name in registry.SEARCHERS: grid | random | adaptive (TrimTuner
-    # cost-aware BO) | trimtuner | adaptive-grid | pbt.  None = the
-    # scheduler's paired default (registry.POLICY_DEFAULTS), else grid —
-    # an explicit name is always honored
+    # cost-aware BO) | trimtuner | trimtuner-gp (GP continuous relaxation) |
+    # adaptive-grid | pbt.  None = the scheduler's paired default
+    # (registry.POLICY_DEFAULTS), else grid — an explicit name is always
+    # honored
     searcher: Optional[str] = None
     num_samples: Optional[int] = None    # random searcher sample count
     initial_trials: Optional[int] = None
@@ -51,10 +53,22 @@ class ScenarioSpec:
     days: float = 12.0
     straggler_factor: float = 0.0
     n_trials: Optional[int] = None       # truncate the suggestion stream
+    # search-space shape: "grid" = the workload's finite Table-II space;
+    # "continuous" = its continuous_variant relaxation (typed domains,
+    # grid-free trial identity) — the registry rejects grid-only searchers
+    # on it at construction
+    space: str = "grid"
+    adaptive_brackets: bool = False      # hyperband survival reweighting
     tag: str = ""                        # free-form grouping label
 
     def workload_obj(self) -> Workload:
-        return _WORKLOADS_BY_NAME[self.workload]
+        w = _WORKLOADS_BY_NAME[self.workload]
+        if self.space == "continuous":
+            return continuous_variant(w)
+        if self.space != "grid":
+            raise ValueError(f"unknown space {self.space!r} "
+                             "(expected 'grid' or 'continuous')")
+        return w
 
     def market_key(self) -> tuple:
         """Replicas agreeing on this key can share one trace set."""
@@ -99,7 +113,8 @@ def _policy_params(spec: ScenarioSpec) -> dict:
     """Flat knob mapping the registry factories pick from."""
     return {"seed": spec.engine_seed, "theta": spec.theta, "mcnt": spec.mcnt,
             "eta": spec.eta, "brackets": spec.brackets,
-            "population": spec.population, "num_samples": spec.num_samples}
+            "population": spec.population, "num_samples": spec.num_samples,
+            "adaptive_brackets": spec.adaptive_brackets}
 
 
 def resolve_policy(spec: ScenarioSpec) -> tuple:

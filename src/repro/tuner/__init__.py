@@ -3,13 +3,24 @@
 engine      policy-free execution engine (market, provisioning,
             checkpoint/restore, refunds) + EngineConfig, TrialState, Status
 events      typed trial lifecycle events the engine emits
+space       typed HP domains (Choice/Ordinal/Uniform/LogUniform/IntUniform)
+            composing into SearchSpace: seeded sampling, [0,1]^d encode /
+            decode, config hashing, grid enumeration as the finite case
 scheduler   Scheduler/Searcher protocols, Decision vocabulary, TrialView
 searchers   GridSearcher / RandomSearcher / ListSearcher + ASHAScheduler
 spottune    the paper's theta + EarlyCurve top-mcnt policy as a Scheduler
-policies    Hyperband brackets, PBT exploit/explore, TrimTuner cost-aware BO
-registry    name -> factory registry (sweeps, benchmarks, conformance tests)
+policies    Hyperband brackets, PBT exploit/explore, TrimTuner cost-aware
+            BO (ridge/grid) + its GP continuous relaxation (trimtuner-gp)
+registry    name -> factory registry (sweeps, benchmarks, conformance
+            tests) + supports_continuous space gating + describe() CLI
 tuner       Tuner facade + RunResult
 """
+
+# initialize repro.core before any tuner submodule: core's orchestrator shim
+# from-imports repro.tuner.engine, so entering the cycle from this side
+# (e.g. `python -m repro.tuner.registry`) must let core finish first —
+# otherwise orchestrator sees a half-initialized engine module
+import repro.core  # noqa: F401  (isort: skip)
 
 from repro.tuner.engine import (EngineConfig, ExecutionEngine,  # noqa: F401
                                 ProvisionBatch, Status, TrialState,
@@ -22,9 +33,13 @@ from repro.tuner.scheduler import (CONTINUE, PAUSE, PROMOTE, STOP,  # noqa: F401
                                    TrialView)
 from repro.tuner.policies import (HyperbandScheduler,  # noqa: F401
                                   PBTScheduler, PBTSearcher,
-                                  TrimTunerSearcher)
+                                  TrimTunerGPSearcher, TrimTunerSearcher)
 from repro.tuner.registry import (POLICY_DEFAULTS, SCHEDULERS,  # noqa: F401
-                                  SEARCHERS, make_scheduler, make_searcher)
+                                  SEARCHERS, describe, make_scheduler,
+                                  make_searcher, searcher_supports)
+from repro.tuner.space import (Choice, Domain, IntUniform,  # noqa: F401
+                               LogUniform, Ordinal, SearchSpace, Uniform,
+                               config_hash)
 from repro.tuner.searchers import (AdaptiveGridSearcher,  # noqa: F401
                                    ASHAScheduler, GridSearcher, ListSearcher,
                                    RandomSearcher)

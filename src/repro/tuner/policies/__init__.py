@@ -16,6 +16,10 @@ rotation) through the ``Scheduler``/``Searcher`` protocols:
               optimization (arXiv 2011.04726): sub-sampled cheap trials
               bootstrap the model, acquisition = expected improvement per
               predicted dollar cost
+  trimtuner_gp  ``TrimTunerGPSearcher`` — the continuous relaxation:
+              Matérn-5/2 GP posterior over ``SearchSpace``-encoded
+              features, EI-per-dollar optimized by seeded random + local
+              search over the space (finite grids are the degenerate case)
 
 All three implement ``preview_metrics`` so the engine's boundary-jumping
 fast path stays event-driven, and all run unmodified under
@@ -28,3 +32,6 @@ into sweeps, benchmarks, and the conformance harness lives in
 from repro.tuner.policies.hyperband import HyperbandScheduler  # noqa: F401
 from repro.tuner.policies.pbt import PBTScheduler, PBTSearcher  # noqa: F401
 from repro.tuner.policies.trimtuner import TrimTunerSearcher  # noqa: F401
+from repro.tuner.policies.trimtuner_gp import (GPPosterior,  # noqa: F401
+                                               TrimTunerGPSearcher,
+                                               matern52)

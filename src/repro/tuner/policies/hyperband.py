@@ -18,6 +18,16 @@ revoked trial below its bracket rung's cutoff is parked instead of
 redeployed.  ``preview_metrics`` routes to the trial's bracket (next rung
 milestone), so the engine's boundary-jumping fast path skips every inert
 crossing exactly as it does for plain ASHA.
+
+``adaptive_brackets=True`` (ROADMAP open item) reweights the bracket
+sampling online: each bracket's static budget-proportional weight is
+scaled by its observed first-rung *survival rate* (smoothed; the rung-less
+run-to-completion bracket keeps the neutral prior).  Workloads whose cheap
+early rungs are informative (low survival — aggressive halving separates
+configs well) push trials into the aggressive brackets; workloads whose
+early metrics are noise (survival near 1/eta by luck alone, everything
+parked) shift budget toward conservative brackets.  Off by default — the
+static weights keep the legacy trial->bracket assignment bit-exact.
 """
 
 from __future__ import annotations
@@ -36,18 +46,22 @@ class HyperbandScheduler(Scheduler):
 
     def __init__(self, eta: int = 3, num_rungs: int = 3,
                  num_brackets: int = 3, min_steps: Optional[int] = None,
+                 adaptive_brackets: bool = False, suggest_batch: int = 4,
                  seed: int = 0):
         assert eta >= 2 and num_brackets >= 1
         self.eta = eta
         self.num_rungs = num_rungs
         self.num_brackets = num_brackets
         self.min_steps = min_steps
+        self.adaptive_brackets = adaptive_brackets
+        self.suggest_batch = suggest_batch
         self.seed = seed
         self._rng = np.random.default_rng(seed)
         self._workload_name: Optional[str] = None
         self.brackets: List[ASHAScheduler] = []
         self._weights: Optional[np.ndarray] = None
         self._bracket_of: Dict[str, int] = {}
+        self._dry = False
 
     # ------------------------------------------------------------- set-up
     def _build(self, w) -> None:
@@ -73,9 +87,49 @@ class HyperbandScheduler(Scheduler):
                 "HyperbandScheduler supports one workload per run"
         else:
             self._build(w)
-        b = int(self._rng.choice(len(self.brackets), p=self._weights))
+        p = self._weights
+        if self.adaptive_brackets:
+            p = self._adaptive_weights()
+        b = int(self._rng.choice(len(self.brackets), p=p))
         self._bracket_of[spec.key] = b
         return self.brackets[b].on_trial_added(spec)
+
+    # -------------------------------------------- adaptive bracket weights
+    def survival_rates(self) -> List[Optional[float]]:
+        """Observed first-rung survival per bracket: the fraction of that
+        bracket's first-rung results currently above the cutoff (not
+        parked on it).  None while a bracket has no first-rung results
+        (including the rung-less run-to-completion bracket)."""
+        rates: List[Optional[float]] = []
+        for br in self.brackets:
+            if not br.rungs or not br._results[0]:
+                rates.append(None)
+                continue
+            res = br._results[0]
+            parked = sum(1 for rung in br._paused.values() if rung == 0)
+            rates.append(1.0 - parked / len(res))
+        return rates
+
+    def _adaptive_weights(self) -> np.ndarray:
+        """Static budget-proportional weights scaled by smoothed survival.
+
+        A bracket whose first rung kills aggressively (low survival) is
+        separating configs cheaply — its weight grows relative to brackets
+        whose rung is mostly a pass-through.  Smoothing: survival shrunk
+        toward the neutral prior 1/2 with pseudo-count 2, so early single
+        observations cannot starve a bracket; the scale factor is
+        ``(1 + prior) - s`` in [1/2, 3/2], keeping every weight positive."""
+        base = self._weights
+        rates = self.survival_rates()
+        scale = np.ones(len(base))
+        for b, s in enumerate(rates):
+            if s is None:
+                continue
+            n = len(self.brackets[b]._results[0])
+            s_smooth = (s * n + 0.5 * 2) / (n + 2)
+            scale[b] = 1.5 - s_smooth
+        w = base * scale
+        return w / w.sum()
 
     # ------------------------------------------------------------- routing
     def _bracket(self, key: str) -> Optional[ASHAScheduler]:
@@ -91,6 +145,19 @@ class HyperbandScheduler(Scheduler):
         for br in self.brackets:
             promos.update(br.take_promotions())
         return promos
+
+    def request_suggestions(self, views: Sequence) -> int:
+        """Adaptive mode admits trials in idle-time waves (instead of the
+        legacy drain-up-front), so later waves are bracket-sampled with
+        survival-informed weights.  Requires a Tuner built with
+        ``initial_trials``; inert in static mode."""
+        if not self.adaptive_brackets or self._dry:
+            return 0
+        return self.suggest_batch
+
+    def suggestions_added(self, n: int) -> None:
+        if n == 0:
+            self._dry = True
 
     def on_idle(self, views: Sequence) -> Dict[str, float]:
         promos: Dict[str, float] = {}

@@ -193,29 +193,50 @@ class PBTScheduler(Scheduler):
 class PBTSearcher(Searcher):
     """Explore half of PBT: initial random population, then perturb/resample.
 
-    The initial ``population`` suggestions are a seeded random subset of the
-    HP grid.  Every later suggestion is a replacement for a truncated member
-    (the bound ``PBTScheduler`` requests them at idle): with probability
+    Written against ``Workload.space``.  On a finite space the initial
+    ``population`` suggestions are a seeded random subset of the grid, and
+    every later suggestion is a replacement for a truncated member (the
+    bound ``PBTScheduler`` requests them at idle): with probability
     ``resample_prob`` a fresh uniformly-drawn unexplored grid point
     (resample), otherwise a copy of a seeded-random top-quantile donor with
-    one HP dimension moved to an adjacent grid value (perturb).  Perturbed
-    configs keep their grid index, so the simulated ground truth stays the
-    same function of HP as under grid search; a perturb that lands on an
-    already-explored config falls back to resampling.  Exhausts to None
-    once the grid is used up.
+    one HP dimension moved through ``Domain.neighbor_values`` — adjacent
+    grid value for the legacy ``Ordinal`` dims.  Perturbed configs keep
+    their grid index, so the simulated ground truth stays the same function
+    of HP as under grid search; a perturb that lands on an already-explored
+    config falls back to resampling.  Exhausts to None once the grid is
+    used up.
+
+    On a continuous space the population seeds from ``space.sample`` and a
+    perturb moves one seeded-random dim via ``Domain.neighbor`` (clipped
+    Gaussian step in encoded coordinates); duplicates are rejected by
+    config hash and the searcher never exhausts.
     """
+
+    supports_continuous = True
 
     def __init__(self, workload: Workload, population: int = 8,
                  resample_prob: float = 0.25, seed: int = 0):
         self.workload = workload
+        self.space = workload.space
         self.resample_prob = resample_prob
-        self.grid = workload.hp_grid()
-        self._idx_of = {self._cfg_key(hp): i for i, hp in enumerate(self.grid)}
         self._rng = np.random.default_rng(seed)
-        order = self._rng.permutation(len(self.grid))
-        self._initial = [int(i) for i in order[:min(population, len(self.grid))]]
-        self._used = set(self._initial)
         self._sched: Optional[PBTScheduler] = None
+        self._used: set = set()                 # config hashes (both modes)
+        if self.space.is_finite:
+            self.grid = self.space.grid()
+            self._idx_of = {self._cfg_key(hp): i
+                            for i, hp in enumerate(self.grid)}
+            order = self._rng.permutation(len(self.grid))
+            self._initial = [int(i)
+                             for i in order[:min(population, len(self.grid))]]
+            self._used_idx = set(self._initial)
+        else:
+            self.grid = None
+            # seeded population, config-hash deduplicated; sample_distinct
+            # terminates with a smaller population when a continuous-typed
+            # space is effectively tiny (pure IntUniform products)
+            self._initial = self.space.sample_distinct(
+                self._rng, population, seen=self._used)
 
     @staticmethod
     def _cfg_key(hp: dict) -> tuple:
@@ -225,42 +246,62 @@ class PBTSearcher(Searcher):
         """Tuner wiring hook: the exploit donor pool lives on the scheduler."""
         self._sched = scheduler
 
+    def _donors(self) -> List[dict]:
+        return (self._sched.exploit_candidates()
+                if self._sched is not None
+                and hasattr(self._sched, "exploit_candidates") else [])
+
     def suggest(self) -> Optional[TrialSpec]:
+        if self.grid is None:
+            return self._suggest_continuous()
         if self._initial:
             i = self._initial.pop(0)
         else:
             i = self._next_replacement()
             if i is None:
                 return None
-            self._used.add(i)
+            self._used_idx.add(i)
         return TrialSpec(self.workload, self.grid[i], i)
 
-    # ------------------------------------------------------------- explore
+    # ----------------------------------------------- explore (finite space)
     def _unused(self) -> List[int]:
-        return [i for i in range(len(self.grid)) if i not in self._used]
+        return [i for i in range(len(self.grid)) if i not in self._used_idx]
 
     def _next_replacement(self) -> Optional[int]:
         unused = self._unused()
         if not unused:
             return None
-        donors = (self._sched.exploit_candidates()
-                  if self._sched is not None
-                  and hasattr(self._sched, "exploit_candidates") else [])
+        donors = self._donors()
         if not donors:
             return int(self._rng.choice(unused))
         if self._rng.uniform() < self.resample_prob:
             return int(self._rng.choice(unused))          # explore: resample
         donor = donors[int(self._rng.integers(len(donors)))]
-        dims = list(self.workload.hp_space)
+        dims = self.space.dims
         for d in self._rng.permutation(len(dims)):
-            key, values = dims[int(d)]
-            values = list(values)
-            j = values.index(donor[key])
-            for nj in (j + 1, j - 1):                     # adjacent values
-                if 0 <= nj < len(values):
-                    hp = dict(donor)
-                    hp[key] = values[nj]
-                    i = self._idx_of.get(self._cfg_key(hp))
-                    if i is not None and i not in self._used:
-                        return i                          # explore: perturb
+            key, domain = dims[int(d)]
+            for nv in domain.neighbor_values(donor[key]):  # adjacent values
+                hp = dict(donor)
+                hp[key] = nv
+                i = self._idx_of.get(self._cfg_key(hp))
+                if i is not None and i not in self._used_idx:
+                    return i                              # explore: perturb
         return int(self._rng.choice(unused))   # donor neighborhood exhausted
+
+    # ------------------------------------------- explore (continuous space)
+    def _suggest_continuous(self) -> Optional[TrialSpec]:
+        if self._initial:
+            return TrialSpec(self.workload, self._initial.pop(0))
+        donors = self._donors()
+        # hash-duplicate rejection, same exhaustion cap as sample_distinct
+        for _ in range(self.space.MAX_DUP_MISSES):
+            if not donors or self._rng.uniform() < self.resample_prob:
+                hp = self.space.sample(self._rng)
+            else:
+                donor = donors[int(self._rng.integers(len(donors)))]
+                hp = self.space.neighbor(donor, self._rng)
+            h = self.space.config_hash(hp)
+            if h not in self._used:
+                self._used.add(h)
+                return TrialSpec(self.workload, hp)
+        return None

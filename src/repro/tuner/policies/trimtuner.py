@@ -28,7 +28,7 @@ sweep's batched == sequential contract requires.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -58,21 +58,30 @@ def _norm_pdf(z: np.ndarray) -> np.ndarray:
 
 
 class TrimTunerSearcher(Searcher):
-    """Cost-aware BO over the HP grid; sub-sampled bootstrap wave."""
+    """Cost-aware BO over a finite space; sub-sampled bootstrap wave.
+
+    The ridge posterior's feature matrix is the space's vectorized
+    ``encode`` — normalized ``[0,1]^d`` coordinates (for the legacy Ordinal
+    dims this is exactly the old positional featurization) — plus the
+    fidelity-deficit column.  The acquisition enumerates the grid, so the
+    searcher is grid-only; ``TrimTunerGPSearcher`` is the continuous
+    relaxation."""
 
     live_results = True      # Tuner feeds finished-trial outcomes mid-run
+    supports_continuous = False
 
     def __init__(self, workload: Workload, initial: int = 6, batch: int = 3,
                  sub_frac: float = 0.4, max_trials: int = 14,
                  ridge: float = 1e-2, seed: int = 0):
         assert 0.0 < sub_frac <= 1.0
         self.workload = workload
-        self.grid = workload.hp_grid()
+        self.space = workload.space
+        self.grid = self.space.grid()
         self.batch = batch
         self.sub_frac = sub_frac
         self.max_trials = min(max_trials, len(self.grid))
         self.ridge = ridge
-        self._feats = np.stack([self._featurize(hp) for hp in self.grid])
+        self._feats = self.space.encode(self.grid)
         rng = np.random.default_rng(seed)
         order = rng.permutation(len(self.grid))
         n0 = min(initial, self.max_trials)
@@ -82,14 +91,6 @@ class TrimTunerSearcher(Searcher):
         self._suggested = {i for i, _ in self._queue}
         # (grid idx, fidelity in (0,1], metric, billed $, steps)
         self._obs: List[Tuple[int, float, float, float, float]] = []
-
-    # ------------------------------------------------------------ features
-    def _featurize(self, hp: dict) -> np.ndarray:
-        out = []
-        for key, values in self.workload.hp_space:
-            values = list(values)
-            out.append(values.index(hp[key]) / max(len(values) - 1, 1))
-        return np.asarray(out, np.float64)
 
     # ------------------------------------------------------------ protocol
     def suggest(self) -> Optional[TrialSpec]:

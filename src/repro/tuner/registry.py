@@ -17,6 +17,13 @@ dict can drive any policy.  ``POLICY_DEFAULTS`` records each scheduler's
 companion searcher and initial-trial seeding for paired policies (PBT needs
 its explore searcher; the adaptive/TrimTuner pair needs incremental
 suggestion instead of drain-up-front).
+
+Space gating: every ``Searcher`` declares ``supports_continuous``;
+``make_searcher`` refuses to build a grid-only searcher for a workload
+whose ``SearchSpace`` has continuous domains — the mismatch surfaces at
+construction, not as a silent mid-run exhaustion.  ``describe()`` renders
+the registry (and each searcher's supported space types) as a table;
+``python -m repro.tuner.registry`` prints it.
 """
 
 from __future__ import annotations
@@ -27,6 +34,7 @@ from repro.core.trial import Workload
 from repro.tuner.policies.hyperband import HyperbandScheduler
 from repro.tuner.policies.pbt import PBTScheduler, PBTSearcher
 from repro.tuner.policies.trimtuner import TrimTunerSearcher
+from repro.tuner.policies.trimtuner_gp import TrimTunerGPSearcher
 from repro.tuner.scheduler import Scheduler, Searcher
 from repro.tuner.searchers import (AdaptiveGridSearcher, ASHAScheduler,
                                    GridSearcher, RandomSearcher)
@@ -47,25 +55,44 @@ SCHEDULERS: Dict[str, SchedulerFactory] = {
     "asha": lambda w, p: ASHAScheduler(eta=p.get("eta", 3)),
     "hyperband": lambda w, p: HyperbandScheduler(
         eta=p.get("eta", 3), num_brackets=p.get("brackets", 3),
+        adaptive_brackets=p.get("adaptive_brackets", False),
         seed=p.get("seed", 0)),
     "pbt": lambda w, p: PBTScheduler(
         population=p.get("population", 8), seed=p.get("seed", 0)),
 }
 
-SEARCHERS: Dict[str, SearcherFactory] = {
-    "grid": lambda w, p: GridSearcher(w),
-    "random": lambda w, p: RandomSearcher(
-        w, num_samples=p.get("num_samples"), seed=p.get("seed", 0)),
+# single source of truth per searcher name: (class, factory).  The class
+# is needed for capability introspection (describe(), space gating)
+# *without* constructing one — construction may legitimately fail on a
+# mismatched space, which is the point of the gate.  Keeping class and
+# factory in one entry means a new searcher cannot be registered for
+# construction but invisible to the gate (or vice versa).
+_SEARCHER_REGISTRY: Dict[str, tuple] = {
+    "grid": (GridSearcher, lambda w, p: GridSearcher(w)),
+    "random": (RandomSearcher, lambda w, p: RandomSearcher(
+        w, num_samples=p.get("num_samples"), seed=p.get("seed", 0))),
     # "adaptive" is the request_suggestions idle-path default; TrimTuner's
     # cost-aware BO replaced the Hamming-halving grid searcher there (the
     # old behavior stays available as "adaptive-grid")
-    "adaptive": lambda w, p: TrimTunerSearcher(w, seed=p.get("seed", 0)),
-    "trimtuner": lambda w, p: TrimTunerSearcher(w, seed=p.get("seed", 0)),
-    "adaptive-grid": lambda w, p: AdaptiveGridSearcher(
-        w, seed=p.get("seed", 0)),
-    "pbt": lambda w, p: PBTSearcher(
-        w, population=p.get("population", 8), seed=p.get("seed", 0)),
+    "adaptive": (TrimTunerSearcher, lambda w, p: TrimTunerSearcher(
+        w, seed=p.get("seed", 0))),
+    "trimtuner": (TrimTunerSearcher, lambda w, p: TrimTunerSearcher(
+        w, seed=p.get("seed", 0))),
+    # the continuous relaxation: GP posterior over encoded features,
+    # EI-per-dollar optimized by seeded random + incumbent local search
+    "trimtuner-gp": (TrimTunerGPSearcher, lambda w, p: TrimTunerGPSearcher(
+        w, seed=p.get("seed", 0))),
+    "adaptive-grid": (AdaptiveGridSearcher,
+                      lambda w, p: AdaptiveGridSearcher(
+                          w, seed=p.get("seed", 0))),
+    "pbt": (PBTSearcher, lambda w, p: PBTSearcher(
+        w, population=p.get("population", 8), seed=p.get("seed", 0))),
 }
+
+SEARCHERS: Dict[str, SearcherFactory] = {
+    name: factory for name, (_, factory) in _SEARCHER_REGISTRY.items()}
+_SEARCHER_CLASSES: Dict[str, type] = {
+    name: cls for name, (cls, _) in _SEARCHER_REGISTRY.items()}
 
 # scheduler name -> paired-searcher wiring a bare spec should default to.
 # ``searcher`` replaces the generic "grid" default; ``initial_trials``
@@ -75,6 +102,18 @@ POLICY_DEFAULTS: Dict[str, dict] = {
     "pbt": {"searcher": "pbt", "initial_trials": "population"},
     "adaptive": {"searcher": "adaptive", "initial_trials": 6},
 }
+
+
+def searcher_supports(name: str, workload: Workload) -> bool:
+    """Can searcher ``name`` operate on the workload's search space?
+    Unknown names raise (mirroring ``make_searcher``) rather than
+    defaulting to a spurious capability answer."""
+    try:
+        cls = _SEARCHER_CLASSES[name]
+    except KeyError:
+        raise ValueError(f"unknown searcher {name!r}") from None
+    return (workload.space.is_finite
+            or getattr(cls, "supports_continuous", False))
 
 
 def make_scheduler(name: str, workload: Workload,
@@ -92,4 +131,37 @@ def make_searcher(name: str, workload: Workload,
         factory = SEARCHERS[name]
     except KeyError:
         raise ValueError(f"unknown searcher {name!r}") from None
+    if not searcher_supports(name, workload):
+        cont = [k for k, d in workload.space.dims if d.is_continuous]
+        raise ValueError(
+            f"searcher {name!r} supports finite spaces only, but workload "
+            f"{workload.name!r} has continuous dims {cont}; pick a searcher "
+            "with supports_continuous=True (see registry.describe())")
     return factory(workload, {**(params or {}), **kw})
+
+
+def describe() -> str:
+    """Human-readable registry dump: every policy with its space support
+    and paired defaults — the `python -m repro.tuner.registry` CLI."""
+    lines = ["schedulers", "----------"]
+    for name in sorted(SCHEDULERS):
+        defaults = POLICY_DEFAULTS.get(name)
+        paired = (f"  [paired searcher: {defaults['searcher']}, "
+                  f"initial_trials: {defaults['initial_trials']}]"
+                  if defaults else "")
+        lines.append(f"  {name:<14} spaces: any (space-agnostic; searcher "
+                     f"picks configs){paired}")
+    lines += ["", "searchers", "---------"]
+    for name in sorted(SEARCHERS):
+        cls = _SEARCHER_CLASSES[name]
+        spaces = ("finite + continuous"
+                  if getattr(cls, "supports_continuous", False)
+                  else "finite (grid) only")
+        live = " live-feedback" if getattr(cls, "live_results", False) else ""
+        lines.append(f"  {name:<14} spaces: {spaces:<21} "
+                     f"[{cls.__name__}]{live}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(describe())

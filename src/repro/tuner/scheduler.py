@@ -170,7 +170,17 @@ class Scheduler:
 
 
 class Searcher:
-    """Base searcher: suggests nothing.  Subclasses yield TrialSpecs."""
+    """Base searcher: suggests nothing.  Subclasses yield TrialSpecs.
+
+    ``supports_continuous`` declares whether the searcher can operate on a
+    ``SearchSpace`` with continuous domains (``Uniform``/``LogUniform``/
+    ``IntUniform``) or requires a finite, enumerable grid.  The registry
+    (``repro.tuner.registry.make_searcher``) enforces the pairing: asking a
+    grid-only searcher to search a continuous space is a ValueError, not a
+    silent truncation."""
+
+    #: can this searcher propose configs off a finite grid?
+    supports_continuous = False
 
     def suggest(self) -> Optional[TrialSpec]:
         return None

@@ -1,10 +1,15 @@
 """Searchers (what to try) and ASHA (when to stop it).
 
-  GridSearcher    the paper's exhaustive 2^4 grid, in ``hp_grid()`` order —
-                  byte-identical to the legacy pre-built trial list
-  RandomSearcher  uniform sample (without replacement) of grid points; trial
-                  indices stay grid indices so simulated ground truth is the
-                  same function of HP as under grid search
+All searchers are written against ``Workload.space`` (the typed
+``repro.tuner.space.SearchSpace``); each declares ``supports_continuous``
+so the registry can gate policy/space pairing.
+
+  GridSearcher    enumeration of a finite space, in ``space.grid()`` order —
+                  byte-identical to the legacy ``hp_grid()`` trial list
+  RandomSearcher  finite space: uniform sample (without replacement) of grid
+                  points, trial indices staying grid indices (legacy RNG
+                  stream preserved); continuous space: seeded
+                  ``space.sample`` stream, config-hash deduplicated
   ListSearcher    wraps an explicit TrialSpec list (the legacy entry point)
 
   ASHAScheduler   asynchronous successive halving on top of the transient
@@ -47,24 +52,45 @@ class ListSearcher(Searcher):
 
 
 class GridSearcher(ListSearcher):
-    """Exhaustive HP grid — current-paper behavior (2^4 per workload)."""
+    """Exhaustive enumeration of a finite space (the paper's 2^4 grid),
+    in ``space.grid()`` order — identical stream to the legacy pre-built
+    trial list.  Grid-only by construction."""
+
+    supports_continuous = False
 
     def __init__(self, workload: Workload):
         super().__init__(make_trials(workload))
 
 
 class RandomSearcher(ListSearcher):
-    """Uniform sample of ``num_samples`` distinct grid points.
+    """Seeded uniform sample of the search space.
 
-    ``num_samples=None`` streams the whole grid in random order — with the
-    Tuner's ``initial_trials`` cap this is the unbounded-search mode: the
-    searcher is consulted incrementally at idle instead of drained up
-    front."""
+    Finite spaces keep the legacy behavior bit-for-bit: ``num_samples``
+    distinct grid points (without replacement, ascending index order),
+    or — with ``num_samples=None`` — the whole grid in permuted order (the
+    unbounded-search mode under the Tuner's ``initial_trials`` cap).
+
+    Continuous spaces draw ``num_samples`` seeded configs through
+    ``space.sample_distinct`` — config-hash deduplicated, grid-free
+    ``TrialSpec``s, and terminating with fewer samples when a
+    continuous-*typed* space is effectively tiny (e.g. a pure
+    ``IntUniform(0, 1)`` product) instead of spinning on duplicate
+    rejection; unbounded streaming needs an explicit sample count there."""
+
+    supports_continuous = True
 
     def __init__(self, workload: Workload, num_samples: Optional[int] = None,
                  seed: int = 0):
-        grid = workload.hp_grid()
+        space = workload.space
         rng = np.random.default_rng(seed)
+        if not space.is_finite:
+            if num_samples is None:
+                raise ValueError(
+                    "RandomSearcher on a continuous space needs num_samples")
+            super().__init__([TrialSpec(workload, hp) for hp in
+                              space.sample_distinct(rng, num_samples)])
+            return
+        grid = space.grid()
         if num_samples is None:
             idx = rng.permutation(len(grid))
             super().__init__(
@@ -87,6 +113,7 @@ class AdaptiveGridSearcher(Searcher):
     refinement is impossible because no results arrived."""
 
     live_results = True      # Tuner feeds finished-trial metrics mid-run
+    supports_continuous = False   # Hamming distance needs the finite grid
 
     def __init__(self, workload: Workload, initial: int = 6, batch: int = 4,
                  top_k: int = 2, max_waves: int = 2, seed: int = 0):

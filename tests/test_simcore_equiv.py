@@ -16,10 +16,10 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.revpred import OracleRevPred
-from repro.core.trial import WORKLOADS
+from repro.core.trial import WORKLOADS, continuous_variant
 from repro.tuner import (AdaptiveSpotTuneScheduler, ASHAScheduler,
                          HyperbandScheduler, PBTScheduler, PBTSearcher,
-                         TrimTunerSearcher)
+                         TrimTunerGPSearcher, TrimTunerSearcher)
 from repro.tuner.equivalence import compare_runs
 
 LOR = WORKLOADS[0]
@@ -109,6 +109,33 @@ def test_fast_equals_exact_trimtuner_bo():
                                                             mcnt=3, seed=0),
         searcher_factory=lambda w: TrimTunerSearcher(w, seed=0),
         initial_trials=6)
+    assert not diffs, "\n".join(diffs)
+
+
+def test_fast_equals_exact_trimtuner_gp_continuous_space():
+    """The GP searcher proposes grid-free configs off the continuous
+    variant (config-hash trial identity, interpolated ground truth); both
+    engine paths must feed it identical cost/metric feedback and replay
+    identical suggestion streams."""
+    diffs = compare_runs(
+        continuous_variant(LOR), days=8.0,
+        scheduler_factory=lambda: AdaptiveSpotTuneScheduler(theta=0.7,
+                                                            mcnt=3, seed=0),
+        searcher_factory=lambda w: TrimTunerGPSearcher(w, seed=0),
+        initial_trials=6)
+    assert not diffs, "\n".join(diffs)
+
+
+@pytest.mark.parametrize("market_seed", [3, 11])
+def test_fast_equals_exact_hyperband_adaptive_brackets(market_seed):
+    """Survival-reweighted bracket sampling admits trials in idle-time
+    waves, folding rung state into later trial->bracket assignments; fast
+    and exact paths must observe identical survival rates at each wave and
+    assign identically."""
+    diffs = compare_runs(
+        LOR, market_seed=market_seed, days=8.0, initial_trials=6,
+        scheduler_factory=lambda: HyperbandScheduler(
+            eta=2, num_brackets=3, adaptive_brackets=True, seed=0))
     assert not diffs, "\n".join(diffs)
 
 

@@ -81,14 +81,22 @@ def test_sequential_cold_matches_warm_outcomes():
 
 
 def _policy_suite_grid():
-    """One replica per new policy (ISSUE 4): Hyperband brackets, PBT
-    exploit/explore, TrimTuner cost-aware BO — all through ScenarioSpec."""
+    """One replica per new policy (ISSUE 4/5): Hyperband brackets (static
+    and survival-adaptive), PBT exploit/explore, TrimTuner cost-aware BO,
+    and its GP relaxation on a continuous space — all through
+    ScenarioSpec."""
     specs = scenario_grid(["LoR"], [1, 3], days=DAYS, scheduler="hyperband",
                           eta=2, revpred="zero", n_trials=8)
     specs += scenario_grid(["SVM"], [2], days=DAYS, scheduler="pbt",
                            revpred="zero")
     specs += scenario_grid(["GBTR"], [4], days=DAYS, scheduler="adaptive",
                            searcher="trimtuner", initial_trials=6,
+                           revpred="zero")
+    specs += scenario_grid(["LoR"], [5], days=DAYS, scheduler="adaptive",
+                           searcher="trimtuner-gp", initial_trials=6,
+                           space="continuous", revpred="zero")
+    specs += scenario_grid(["LiR"], [6], days=DAYS, scheduler="hyperband",
+                           eta=2, adaptive_brackets=True, initial_trials=6,
                            revpred="zero")
     return specs
 
@@ -103,6 +111,25 @@ def test_new_policy_sweep_batched_matches_sequential():
     for b, s in zip(batched.replicas, seq.replicas):
         _assert_replica_equal(b.spec, b.result, s.result)
         assert b.metrics == s.metrics
+
+
+def test_continuous_space_spec_routes_through_variant():
+    """space="continuous" materializes the workload's continuous variant:
+    grid-free config-hash trial keys, registry space-gating honored."""
+    spec = ScenarioSpec(workload="LoR", market_seed=2, scheduler="adaptive",
+                        searcher="trimtuner-gp", initial_trials=6,
+                        space="continuous", days=DAYS, revpred="zero")
+    assert spec.workload_obj().name == "LoR~c"
+    res = SweepRunner().run([spec])
+    r = res.replicas[0].result
+    assert r.per_trial_steps
+    assert all(k.startswith("LoR~c/cfg") for k in r.per_trial_steps)
+    # a grid-only searcher on the same spec is rejected at build time
+    bad = ScenarioSpec(workload="LoR", market_seed=2, scheduler="adaptive",
+                       searcher="trimtuner", initial_trials=6,
+                       space="continuous", days=DAYS, revpred="zero")
+    with pytest.raises(ValueError, match="finite spaces only"):
+        SweepRunner().run([bad])
 
 
 def test_pbt_spec_defaults_pair_searcher_and_population():
