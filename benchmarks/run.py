@@ -100,7 +100,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,fig12,"
-                         "asha,roofline")
+                         "asha,roofline,train")
     ap.add_argument("--json", nargs="?", const="BENCH_simcore.json",
                     default=None, metavar="PATH",
                     help="write a JSON benchmark record (default "
@@ -126,7 +126,7 @@ def main() -> None:
     from benchmarks import (asha_compare, fig6_profiling, fig7_cost_perf,
                             fig8_theta, fig9_refund, fig10_revpred,
                             fig11_earlycurve, fig12_checkpoint,
-                            roofline_report)
+                            roofline_report, training_trials)
     from repro.core.trial import WORKLOADS
 
     quick_w = WORKLOADS[:2]
@@ -147,6 +147,7 @@ def main() -> None:
         "asha": lambda: asha_compare.run(
             workloads=quick_w[:1] if args.quick else None),
         "roofline": lambda: roofline_report.run(),
+        "train": lambda: training_trials.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(suite)
 

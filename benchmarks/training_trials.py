@@ -1,0 +1,99 @@
+"""Real-trial benchmark: EarlyCurve predicted-vs-actual final loss on the
+training backend (the EXPERIMENTS.md small-scale real-trial row).
+
+For every config of a seed arch's HP grid, train the real (reduced) model to
+its trial horizon through ``repro.backends.training``, fit EarlyCurve on the
+first theta fraction of the validation-loss stream, and compare the
+predicted final loss against the actual one — the paper's Fig. 11 protocol,
+but on genuine JAX training curves instead of the simulator's staged traces.
+
+The non-quick run also drives one full SpotTune scenario
+(``ScenarioSpec(backend="training")``) and records its outcome: cost,
+refunds (> 0 iff at least one first-hour revocation fired), and real
+snapshot/restore counts through ``repro.checkpoint``.
+
+Wall times are host-dependent (CPU jit); the derived EarlyCurve errors are
+deterministic for a fixed jax version.
+
+    PYTHONPATH=src python -m benchmarks.training_trials --quick
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.earlycurve import EarlyCurve
+
+
+def _grid_rows(arch: str, theta: float) -> list[tuple]:
+    from repro.backends.training import TrainingTrialBackend, training_workload
+    from repro.core.trial import TrialSpec
+
+    be = TrainingTrialBackend()
+    w = training_workload(arch)
+    ec = EarlyCurve()
+    steps = np.arange(w.val_every, w.max_trial_steps + 1, w.val_every)
+    cut = int(theta * len(steps))
+    errs, preds, finals = [], [], []
+    for i, hp in enumerate(w.hp_grid()):
+        t = TrialSpec(w, hp, i)
+        vals = np.array(be.metric_range(t, int(steps[0]), int(steps[-1])))
+        tf = be.true_final(t)
+        p = ec.predict_final(steps[:cut], vals[:cut], w.max_trial_steps)
+        errs.append(abs(p - tf) / tf)
+        preds.append(p)
+        finals.append(tf)
+    top1 = int(np.argmin(preds) == np.argmin(finals))
+    return [
+        (f"train_{arch}_ec_err_mean", 0.0, round(float(np.mean(errs)), 4)),
+        (f"train_{arch}_ec_err_max", 0.0, round(float(np.max(errs)), 4)),
+        (f"train_{arch}_ec_top1", 0.0, top1),
+        (f"train_{arch}_best_final_loss", 0.0,
+         round(float(np.min(finals)), 4)),
+    ]
+
+
+def _scenario_rows() -> list[tuple]:
+    from repro.sweep.runner import SweepRunner
+    from repro.sweep.spec import ScenarioSpec
+
+    spec = ScenarioSpec(workload="qwen1.5-0.5b", market_seed=0,
+                        scheduler="spottune", theta=0.7,
+                        backend="training", days=2.0)
+    tuner = SweepRunner().prepare([spec])[0]
+    be = tuner.engine.backend
+    res = tuner.run()
+    return [
+        ("train_scenario_top1_correct", 0.0, int(res.top1_correct)),
+        ("train_scenario_cost_usd", 0.0, round(res.cost, 2)),
+        ("train_scenario_refunded_usd", 0.0, round(res.refunded, 2)),
+        ("train_scenario_redeployments", 0.0, res.redeployments),
+        ("train_scenario_snapshots", 0.0, be.snapshots),
+        ("train_scenario_restores", 0.0, be.restores),
+        ("train_scenario_mb_written", 0.0,
+         round(be.store.inner.bytes_written / 1e6, 1)),
+    ]
+
+
+def run(quick: bool = False, theta: float = 0.7) -> list[tuple]:
+    from repro.backends.training import TRAINING_ARCHS
+
+    rows = []
+    for arch in (TRAINING_ARCHS[:1] if quick else TRAINING_ARCHS):
+        rows.extend(_grid_rows(arch, theta))
+    if not quick:
+        rows.extend(_scenario_rows())
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="first arch only, skip the full-scenario run (CI)")
+    ap.add_argument("--theta", type=float, default=0.7)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick, theta=args.theta):
+        print(f"{name},{us:.1f},{derived}", flush=True)

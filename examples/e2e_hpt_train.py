@@ -1,194 +1,73 @@
 """End-to-end driver: REAL JAX training under the SpotTune loop.
 
-Hyper-parameter-tunes a ~100M-param dense LM (a scaled-down qwen-family
-config) over a small HP grid with ACTUAL train steps on this machine:
+Hyper-parameter-tunes a reduced seed config (qwen1.5-0.5b by default) with
+ACTUAL train steps on this machine, through the same engine/policy stack
+the simulation uses — ``ScenarioSpec(backend="training")`` swaps the
+synthetic ``SimTrialBackend`` for ``repro.backends.training``:
 
-  * each trial is a repro.launch.train.Trainer (real forward/backward);
-  * a simulated spot market supplies instance choices, revocations with the
-    2-minute notice, first-hour refunds, and billing — instance speed maps
-    real step time onto virtual market time via per-slice speed factors;
-  * on revocation the trial checkpoints to the (throttled) object store and
-    is re-deployed on the provisioner's next Eq.-2 pick, restoring from the
-    checkpoint (elastic restart — the paper's core mechanism);
-  * the *search policy* is the pluggable ``SpotTuneScheduler``
-    (repro.tuner): each trial's theta-fraction budget comes from
-    ``on_trial_added``, metric points are fed to it as ``MetricReported``
-    events (a STOP answer = plateau early-shutdown), and the
-    ``on_idle`` promotion round picks the top-mcnt trials to continue to
-    completion from their checkpoints — the same scheduler object that
-    drives the simulation engine, here driving real training.
+  * each trial is a ``repro.launch.train.Trainer`` (real forward/backward);
+    ``SearchSpace`` configs bind to real knobs via ``TrainingBinding``
+    (lr -> AdamW peak LR, dr/ds -> exponential decay, bs -> batch);
+  * the simulated spot market supplies instance choices, revocations with
+    the 2-minute notice, first-hour refunds, and billing; per-instance step
+    time comes from the HLO/roofline cost model of the compiled train step;
+  * on revocation the engine checkpoints through ``repro.checkpoint`` into
+    a bandwidth-modelled object store (gated by ``fits_deadline``) and the
+    next deploy restores the real optimizer state (elastic restart — the
+    paper's core mechanism);
+  * the search policy is any registered scheduler; the default is the
+    paper's ``SpotTuneScheduler`` with EarlyCurve final-loss prediction
+    fitted on the real validation-loss stream.
 
-    PYTHONPATH=src python examples/e2e_hpt_train.py --small       # ~2 min
-    PYTHONPATH=src python examples/e2e_hpt_train.py               # ~100M params
+    PYTHONPATH=src python examples/e2e_hpt_train.py                 # ~1 min
+    PYTHONPATH=src python examples/e2e_hpt_train.py --arch mamba2-130m
+    PYTHONPATH=src python examples/e2e_hpt_train.py --scheduler pbt
 """
 
 import argparse
-import os
-import tempfile
+import time
 
-from repro.checkpoint import CheckpointManager, LocalObjectStore, ThrottledStore
-from repro.checkpoint.checkpointer import tree_bytes
-from repro.configs.base import ModelConfig
-from repro.core.earlycurve import EarlyCurve
-from repro.core.market import HOUR, SpotMarket
-from repro.core.provisioner import PerfModel, Provisioner
-from repro.core.revpred import OracleRevPred
-from repro.core.trial import TrialSpec, Workload
-from repro.launch.train import Trainer
-from repro.optim.schedules import exponential_decay_schedule
-from repro.tuner import (DecisionKind, MetricReported, SpotTuneScheduler,
-                         TrialView)
-
-
-def lm_100m():
-    return ModelConfig(
-        name="hpt-lm-100m", family="dense", n_layers=10, d_model=640,
-        n_heads=10, n_kv_heads=10, d_ff=2560, vocab_size=32064,
-        dtype="float32")
-
-
-def lm_small():
-    return ModelConfig(
-        name="hpt-lm-small", family="dense", n_layers=2, d_model=128,
-        n_heads=4, n_kv_heads=4, d_ff=384, vocab_size=1024, dtype="float32")
+from repro.backends.training import TRAINING_ARCHS
+from repro.sweep.runner import SweepRunner
+from repro.sweep.spec import ScenarioSpec
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--small", action="store_true")
-    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=TRAINING_ARCHS)
+    ap.add_argument("--scheduler", default="spottune")
     ap.add_argument("--theta", type=float, default=0.7)
-    ap.add_argument("--mcnt", type=int, default=1)
+    ap.add_argument("--market-seed", type=int, default=0)
+    ap.add_argument("--days", type=float, default=2.0)
     args = ap.parse_args()
 
-    cfg = lm_small() if args.small else lm_100m()
-    batch, seq = (4, 64) if args.small else (4, 128)
-    max_steps = args.steps or (60 if args.small else 300)
-    val_every = max(2, max_steps // 30)
-    hps = [
-        {"lr": 3e-3, "dr": 1.0, "ds": max_steps},
-        {"lr": 1e-3, "dr": 0.5, "ds": max_steps // 3},
-        {"lr": 3e-4, "dr": 1.0, "ds": max_steps},
-        {"lr": 1e-2, "dr": 0.3, "ds": max_steps // 3},
-    ]
-    from repro.models.model import count_params_analytic
+    spec = ScenarioSpec(workload=args.arch, market_seed=args.market_seed,
+                        scheduler=args.scheduler, theta=args.theta,
+                        backend="training", days=args.days)
+    spec.validate()
+    print(f"arch={args.arch} scheduler={args.scheduler} theta={args.theta} "
+          f"market_seed={args.market_seed}")
 
-    print(f"model: {cfg.name} ({count_params_analytic(cfg)/1e6:.1f}M params), "
-          f"{len(hps)} HP settings, max_steps={max_steps}, theta={args.theta}")
+    t0 = time.time()
+    tuner = SweepRunner().prepare([spec])[0]
+    backend = tuner.engine.backend
+    res = tuner.run()
+    wall = time.time() - t0
 
-    market = SpotMarket(days=12, seed=3)
-    revpred = OracleRevPred(market)
-    perf = PerfModel(market.pool)
-    prov = Provisioner(market, revpred, perf, seed=0)
-    workload = Workload("hpt-lm", (), max_steps, val_every, s0=1.0,
-                        scale_exp=0.5, model_bytes=1.0)
-    store = ThrottledStore(LocalObjectStore(
-        os.path.join(tempfile.mkdtemp(prefix="spottune_s3_"), "bucket")),
-        bandwidth_bps=134.22e6, latency_s=0.05, simulate=True)
-
-    # the paper's policy, as a pluggable scheduler over real training
-    sched = SpotTuneScheduler(theta=args.theta, mcnt=args.mcnt,
-                              earlycurve=EarlyCurve(min_points=4), seed=0)
-
-    # real seconds/step measured on THIS machine correspond to the 8-chip
-    # reference slice; other slices scale virtual time by chips^0.5
-    def speed_factor(inst):
-        return (inst.chips / 8.0) ** 0.5
-
-    t_virtual = 4 * HOUR  # market entry time
-    trainers = {}
-    views = []
-    for i, hp in enumerate(hps):
-        spec = TrialSpec(workload, hp, i)
-        view = TrialView(spec, target_steps=sched.on_trial_added(spec))
-        views.append(view)
-        sched_stop = False
-
-        schedfn = exponential_decay_schedule(hp["lr"], hp["dr"], hp["ds"])
-        mgr = CheckpointManager(store, f"hp{i:02d}", save_interval_steps=10**9,
-                                keep_n=2)
-        tr = Trainer(cfg, batch=batch, seq=seq, seed=0, lr_schedule=schedfn,
-                     ckpt=mgr, val_every=val_every)
-        trainers[i] = tr
-        # the trainer owns the metric history; the scheduler sees it live
-        view.metrics_steps = tr.metrics_steps
-        view.metrics_vals = tr.metrics_vals
-        cost0 = market.billed
-        t = t_virtual
-        while tr.step < view.target_steps and not sched_stop:
-            choice = prov.best_instance(t, spec)
-            alloc = market.acquire(choice.inst, choice.max_price, t)
-            t += 60.0 + (store.transfer_time(tree_bytes(tr.state))
-                         if tr.step else 0.0)  # deploy + restore
-            if tr.step:
-                tr.restore()
-                # restore() rebuilds the metric lists; re-alias the view
-                view.metrics_steps = tr.metrics_steps
-                view.metrics_vals = tr.metrics_vals
-            # run until revocation notice / hour rotation / finish / STOP
-            sf = speed_factor(choice.inst)
-            while tr.step < view.target_steps:
-                done = len(tr.metrics_vals)
-                tr.run_steps(min(val_every, int(view.target_steps) - tr.step))
-                t += tr.mean_step_time() * val_every / sf
-                view.steps = tr.step
-                perf.update(choice.inst, spec, tr.mean_step_time() / sf)
-                for step, val in zip(tr.metrics_steps[done:],
-                                     tr.metrics_vals[done:]):
-                    d = sched.on_event(MetricReported(t, view.key, step, val),
-                                       view)
-                    if d.kind == DecisionKind.STOP:
-                        sched_stop = view.stopped = True
-                if sched_stop:
-                    tr.save()
-                    market.release(alloc, t, revoked=False)
-                    print(f"  hp{i:02d}: plateau STOP at step {tr.step}")
-                    break
-                notice = market.notice_time(alloc)
-                if notice is not None and t >= notice:
-                    tr.save()                       # checkpoint on notice
-                    t = alloc.t_revoke
-                    market.release(alloc, t, revoked=True)
-                    print(f"  hp{i:02d}: REVOKED {choice.inst.name} at step "
-                          f"{tr.step} (checkpointed, refunded)")
-                    break
-                if t - alloc.t_start >= HOUR:       # 1-hour proactive rotate
-                    tr.save()
-                    market.release(alloc, t, revoked=False)
-                    print(f"  hp{i:02d}: hour-rotation off {choice.inst.name} "
-                          f"at step {tr.step}")
-                    break
-            else:
-                tr.save()
-                market.release(alloc, t, revoked=False)
-        view.steps = tr.step
-        print(f"  hp{i:02d} lr={hp['lr']:g} dr={hp['dr']:g}: "
-              f"loss@{tr.step}={tr.metrics_vals[-1]:.4f} "
-              f"virtual cost=${market.billed - cost0:.2f}")
-
-    # phase 2: the scheduler predicts finals and promotes the top-mcnt
-    promotions = sched.on_idle(views)
-    preds = sched.predictions(views)
-    ranked = sched.rank(views)
-    print(f"\nEarlyCurve predictions: "
-          f"{ {k: round(v, 4) for k, v in preds.items()} }")
-    print(f"ranking: {ranked}; continuing top-{args.mcnt}: {list(promotions)}")
-    for view in views:
-        if view.key not in promotions:
-            continue
-        i = view.spec.idx
-        tr = trainers[i]
-        view.target_steps = promotions[view.key]
-        tr.run_steps(int(view.target_steps) - tr.step)
-        view.steps = tr.step
-        print(f"  hp{i:02d} final loss@{tr.step}: {tr.metrics_vals[-1]:.4f}")
-
-    print(f"\nTOTAL billed=${market.billed:.2f} refunded=${market.refunded:.2f} "
-          f"(ckpt store wrote {store.inner.bytes_written/1e6:.1f} MB, "
-          f"simulated transfer {store.simulated_time:.1f}s)")
-    best = ranked[0]
-    best_i = [v.spec.idx for v in views if v.key == best][0]
-    print(f"selected model: hp{best_i:02d} {hps[best_i]}")
+    print(f"\nbest (EarlyCurve-predicted): {res.predicted_rank[0]}  "
+          f"true best: {res.true_rank[0]}  top-1 correct: {res.top1_correct}")
+    print(f"virtual cost=${res.cost:.2f} (refunded ${res.refunded:.2f}), "
+          f"JCT={res.jct/3600:.1f} h, redeployments={res.redeployments}")
+    print(f"real checkpoints: {backend.snapshots} snapshots, "
+          f"{backend.restores} restores "
+          f"({backend.store.inner.bytes_written/1e6:.1f} MB written, "
+          f"simulated transfer {backend.store.simulated_time:.1f}s)")
+    for v in sorted(tuner.engine.views(), key=lambda v: v.key):
+        host = backend.host_step_time(v.spec)
+        last = v.metrics_vals[-1] if v.metrics_vals else float("nan")
+        print(f"  {v.key}: steps={v.steps:.0f} loss={last:.4f} "
+              f"host {host*1e3:.0f} ms/step")
+    print(f"wall time {wall:.1f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,69 @@
+"""Trial backends: the ground-truth providers behind the execution engine.
+
+``TrialBackend`` (``repro.backends.base``) is the protocol; two
+implementations ship:
+
+  sim        ``repro.core.trial.SimTrialBackend`` — synthetic anchor-lattice
+             curves and a hand-modelled step-time table.  Dependency-light,
+             bit-exact, the default everywhere.
+  training   ``repro.backends.training.TrainingTrialBackend`` — each trial
+             is an actual jitted JAX training run of a small seed config;
+             metric streams are real validation losses, snapshots go through
+             ``repro.checkpoint``, and per-instance step times come from the
+             HLO/roofline cost model.
+
+``BACKENDS`` is the machine-readable registry (consumed by
+``repro.tuner.registry.describe_json`` and ``ScenarioSpec.validate``);
+``make_backend`` constructs by name.  The training backend (and jax) is
+imported lazily so sim-only paths never pay for it.
+"""
+
+from __future__ import annotations
+
+from repro.backends.base import TrialBackend
+
+#: name -> metadata for every registered backend.  ``spaces`` lists the
+#: ScenarioSpec ``space`` values the backend can ground-truth; ``workloads``
+#: (training only) the seed configs it binds HPs onto.
+BACKENDS = {
+    "sim": {
+        "class": "SimTrialBackend",
+        "module": "repro.core.trial",
+        "spaces": ["grid", "continuous"],
+        "workloads": None,          # any Table-II workload (and variants)
+        "default": True,
+    },
+    "training": {
+        "class": "TrainingTrialBackend",
+        "module": "repro.backends.training",
+        "spaces": ["grid"],
+        "workloads": ["qwen1.5-0.5b", "mamba2-130m", "whisper-base"],
+        "default": False,
+    },
+}
+
+
+def make_backend(name: str, pool=None, **kw):
+    """Construct a backend by registry name (lazy heavy imports)."""
+    if name == "sim":
+        from repro.core.market import DEFAULT_POOL
+        from repro.core.trial import SimTrialBackend
+        return SimTrialBackend(list(pool or DEFAULT_POOL), **kw)
+    if name == "training":
+        from repro.backends.training import TrainingTrialBackend
+        return TrainingTrialBackend(pool=pool, **kw)
+    raise ValueError(f"unknown backend {name!r} "
+                     f"(registered: {sorted(BACKENDS)})")
+
+
+def __getattr__(name):
+    if name == "TrainingTrialBackend":
+        from repro.backends.training import TrainingTrialBackend
+        return TrainingTrialBackend
+    if name == "TrainingBinding":
+        from repro.backends.training import TrainingBinding
+        return TrainingBinding
+    raise AttributeError(name)
+
+
+__all__ = ["TrialBackend", "BACKENDS", "make_backend"]

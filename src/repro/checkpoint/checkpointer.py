@@ -178,6 +178,13 @@ class CheckpointManager:
     def restore_latest(self, like, sharding_fn=None):
         return restore_pytree(self.store, self.prefix, like, sharding_fn=sharding_fn)
 
+    def restore(self, like, step: Optional[int] = None, sharding_fn=None):
+        """Restore a specific checkpoint step (None = latest) — the
+        re-deploy path when a revoked trial must resume from the snapshot
+        that actually fit the notice deadline, not the newest one."""
+        return restore_pytree(self.store, self.prefix, like, step=step,
+                              sharding_fn=sharding_fn)
+
     def _gc(self):
         all_steps = steps(self.store, self.prefix)
         for s in all_steps[: -self.keep_n] if self.keep_n else []:

@@ -23,8 +23,10 @@ anchor lattice (continuous suggestions), ground truth is the multilinear
 interpolation of the per-anchor curves in the space's encoded ``[0,1]^d``
 coordinates — smooth between lattice points, bit-exact on them.
 
-``RealTrialBackend`` (launch/train.py) swaps in actual JAX training for the
-end-to-end example; the orchestrator is agnostic.
+``SimTrialBackend`` implements the ``repro.backends.base.TrialBackend``
+protocol; ``repro.backends.training.TrainingTrialBackend`` swaps in actual
+JAX training runs (real loss streams, real checkpoints) behind the same
+surface — the engine is agnostic.
 """
 
 from __future__ import annotations
@@ -35,6 +37,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.backends.base import TrialBackend
 from repro.core.market import InstanceType, stable_hash
 
 
@@ -161,6 +164,13 @@ class TrialSpec:
     # a sub-sampled cheap evaluation (TrimTuner-style) — honored by
     # schedulers whose on_trial_added consults it, ignored by the rest
     budget_frac: float = 1.0
+    # donor-checkpoint inheritance: ``(donor_trial_key, donor_step)`` when
+    # this suggestion should start from another trial's training state (PBT
+    # exploit, TrimTuner warm start) instead of a fresh init.  The sim
+    # backend ignores it (its curves are pure functions of the HP config);
+    # ``TrainingTrialBackend`` seeds the new trial's params/optimizer from
+    # the donor's state at that step.
+    inherit: Optional[tuple] = None
 
     GRID_FREE = -1
 
@@ -256,8 +266,12 @@ def _spec_key(trial: TrialSpec) -> tuple:
     return (trial.workload, tuple(sorted(trial.hp.items())), trial.idx)
 
 
-class SimTrialBackend:
-    """Ground truth for the simulation: step times, loss curves, model size."""
+class SimTrialBackend(TrialBackend):
+    """Ground truth for the simulation: step times, loss curves, model size.
+
+    Implements the ``TrialBackend`` protocol; every method below overrides
+    the base with the synthetic ground truth (the snapshot/restore hooks
+    keep the base no-ops — analytic curves carry no state to persist)."""
 
     def __init__(self, pool: List[InstanceType], ref_chips: int = 8):
         self.pool = pool

@@ -1,5 +1,6 @@
 """Training driver: train_step builder (shared by dry-run and real runs) and
-a CPU-runnable Trainer used by the HPT examples and the RealTrialBackend.
+a CPU-runnable Trainer used by the HPT examples and
+``repro.backends.training.TrainingTrialBackend``.
 
 The train step is one pjit'd program: loss (vocab-sharded xent + MoE aux) →
 grads → clip → AdamW update.  Fault tolerance comes from the checkpoint
@@ -46,9 +47,9 @@ def init_state(model: Model, optimizer: Optimizer, seed: int = 0):
 class Trainer:
     """Small real-training loop (CPU-scale configs) with checkpoint/restart.
 
-    Used by examples/ and core.trial.RealTrialBackend: SpotTune treats one
-    Trainer as one HPT trial; ``run_steps`` advances it and returns the
-    validation metrics stream the Orchestrator/EarlyCurve consume.
+    Used by examples/ and ``repro.backends.training.TrainingTrialBackend``:
+    SpotTune treats one Trainer as one HPT trial; ``run_steps`` advances it
+    and returns the validation metrics stream the engine/EarlyCurve consume.
     """
 
     def __init__(self, cfg, batch: int, seq: int, lr: float = 3e-3,
@@ -96,10 +97,14 @@ class Trainer:
                 "metrics_vals": self.metrics_vals}
         self.ckpt.save(self.step, self.state, blocking=blocking, extra_meta=meta)
 
-    def restore(self, sharding_fn=None):
+    def restore(self, sharding_fn=None, step=None):
+        """Rehydrate from the latest checkpoint (or an explicit ``step``);
+        the metric stream reloads from the manifest so the trial continues
+        the original stream exactly."""
         assert self.ckpt is not None
         like = jax.tree.map(lambda x: x, self.state)
-        self.state, step = self.ckpt.restore_latest(like, sharding_fn=sharding_fn)
+        self.state, step = self.ckpt.restore(like, step=step,
+                                             sharding_fn=sharding_fn)
         self.step = step
         import json
 

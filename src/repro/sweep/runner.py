@@ -37,8 +37,8 @@ from repro.core import revpred as revpred_mod
 from repro.core import trial as trial_mod
 from repro.core.earlycurve import predict_final_grouped
 from repro.core.market import SpotMarket
+from repro.backends import make_backend
 from repro.core.revpred import predict_pool_multi
-from repro.core.trial import SimTrialBackend
 from repro.sweep.result import ReplicaResult, SweepResult
 from repro.sweep.spec import ScenarioSpec, build_replica, build_revpred
 from repro.tuner import FitRequest, ProvisionBatch, Tuner
@@ -79,8 +79,20 @@ class SweepRunner:
 
     def prepare(self, specs: Sequence[ScenarioSpec]) -> List[Tuner]:
         """Materialize replicas with shared traces/backend/predictors."""
+        for spec in specs:
+            spec.validate()       # whole-grid gate before any heavy work
         self._prewarm_traces(specs)
-        backend = SimTrialBackend(list(market_mod.DEFAULT_POOL))
+        # one backend instance per kind across the grid: sim replicas share
+        # curve/step-time memos; training replicas share materialized runs
+        # and the checkpoint store
+        backends: Dict[str, object] = {}
+
+        def _backend(kind: str):
+            if kind not in backends:
+                backends[kind] = make_backend(
+                    kind, pool=list(market_mod.DEFAULT_POOL))
+            return backends[kind]
+
         shared_rp: Dict[tuple, object] = {}
         tuners = []
         for spec in specs:
@@ -91,7 +103,8 @@ class SweepRunner:
                 rp = shared_rp[rp_key] = build_revpred(
                     spec, market, train_minutes=self.train_minutes,
                     epochs=self.revpred_epochs, stride=self.revpred_stride)
-            tuners.append(build_replica(spec, market, backend, rp))
+            tuners.append(build_replica(spec, market, _backend(spec.backend),
+                                        rp))
         return tuners
 
     # ------------------------------------------------------------ driving
@@ -193,7 +206,7 @@ class SweepRunner:
             if cold:
                 clear_shared_caches()
             market = SpotMarket(days=spec.days, seed=spec.market_seed)
-            backend = SimTrialBackend(market.pool)
+            backend = make_backend(spec.backend, pool=market.pool)
             rp = build_revpred(spec, market, train_minutes=self.train_minutes,
                                epochs=self.revpred_epochs,
                                stride=self.revpred_stride)

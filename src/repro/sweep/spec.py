@@ -15,11 +15,11 @@ import dataclasses
 import itertools
 from typing import Dict, Iterable, List, Optional, Union
 
+from repro.backends.base import TrialBackend
 from repro.core.market import SpotMarket
 from repro.core.provisioner import ZeroRevPred
 from repro.core.revpred import OracleRevPred, RevPred
-from repro.core.trial import (WORKLOADS, SimTrialBackend, Workload,
-                              continuous_variant)
+from repro.core.trial import WORKLOADS, Workload, continuous_variant
 from repro.tuner import (POLICY_DEFAULTS, Scheduler, Searcher, Tuner,
                          build_engine, make_scheduler, make_searcher)
 
@@ -59,16 +59,73 @@ class ScenarioSpec:
     # on it at construction
     space: str = "grid"
     adaptive_brackets: bool = False      # hyperband survival reweighting
+    # trial ground truth: "sim" = synthetic anchor-lattice curves (default,
+    # bit-exact); "training" = real jitted JAX training runs of a seed
+    # config (repro.backends.training) — workload names the arch id
+    # ("qwen1.5-0.5b" | "mamba2-130m" | "whisper-base", with or without the
+    # "train-" prefix)
+    backend: str = "sim"
     tag: str = ""                        # free-form grouping label
 
     def workload_obj(self) -> Workload:
-        w = _WORKLOADS_BY_NAME[self.workload]
-        if self.space == "continuous":
-            return continuous_variant(w)
-        if self.space != "grid":
+        if self.space not in ("grid", "continuous"):
             raise ValueError(f"unknown space {self.space!r} "
                              "(expected 'grid' or 'continuous')")
+        if self.backend == "training":
+            from repro.backends.training import TRAINING_WORKLOADS
+            arch = (self.workload[len("train-"):]
+                    if self.workload.startswith("train-") else self.workload)
+            try:
+                w = TRAINING_WORKLOADS[arch]
+            except KeyError:
+                raise ValueError(
+                    f"workload {self.workload!r} has no training binding "
+                    f"(bound archs: {sorted(TRAINING_WORKLOADS)})") from None
+        else:
+            w = _WORKLOADS_BY_NAME[self.workload]
+        if self.space == "continuous":
+            return continuous_variant(w)
         return w
+
+    def validate(self) -> None:
+        """Check the policy/space/backend combo against the machine-readable
+        registry (``repro.tuner.registry.describe_json``) before any replica
+        is built — invalid combos fail here with a targeted message instead
+        of surfacing as a mid-run construction error."""
+        from repro.tuner.registry import describe_json
+        info = describe_json()
+        if self.backend not in info["backends"]:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(registered: {sorted(info['backends'])})")
+        bmeta = info["backends"][self.backend]
+        if self.scheduler not in info["schedulers"]:
+            raise ValueError(f"unknown scheduler {self.scheduler!r} "
+                             f"(registered: {sorted(info['schedulers'])})")
+        _, searcher, _ = resolve_policy(self)
+        if searcher not in info["searchers"]:
+            raise ValueError(f"unknown searcher {searcher!r} "
+                             f"(registered: {sorted(info['searchers'])})")
+        if self.space not in info["spaces"]:
+            raise ValueError(f"unknown space {self.space!r} "
+                             f"(known: {info['spaces']})")
+        if self.space not in bmeta["spaces"]:
+            raise ValueError(
+                f"backend {self.backend!r} ground-truths spaces "
+                f"{bmeta['spaces']}, not {self.space!r} (real training has "
+                "no anchor-lattice interpolation for grid-free configs)")
+        if (self.space == "continuous"
+                and not info["searchers"][searcher]["supports_continuous"]):
+            raise ValueError(
+                f"searcher {searcher!r} supports finite spaces only but "
+                f"space={self.space!r}; pick one with "
+                "supports_continuous=True (see registry.describe())")
+        if bmeta["workloads"] is not None:
+            arch = (self.workload[len("train-"):]
+                    if self.workload.startswith("train-") else self.workload)
+            if arch not in bmeta["workloads"]:
+                raise ValueError(
+                    f"backend {self.backend!r} binds workloads "
+                    f"{bmeta['workloads']}, got {self.workload!r}")
 
     def market_key(self) -> tuple:
         """Replicas agreeing on this key can share one trace set."""
@@ -169,8 +226,9 @@ def build_revpred(spec: ScenarioSpec, market: SpotMarket,
 
 
 def build_replica(spec: ScenarioSpec, market: SpotMarket,
-                  backend: SimTrialBackend, revpred) -> Tuner:
+                  backend: TrialBackend, revpred) -> Tuner:
     """Spec + (possibly shared) market/backend/predictor -> runnable Tuner."""
+    spec.validate()
     engine = build_engine(market, backend, revpred, seed=spec.engine_seed,
                           straggler_factor=spec.straggler_factor)
     _, searcher_name, initial = resolve_policy(spec)

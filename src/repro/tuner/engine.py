@@ -58,9 +58,10 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.backends.base import TrialBackend
 from repro.core.market import HOUR, Allocation, SpotMarket
 from repro.core.provisioner import Choice, PerfModel, Provisioner
-from repro.core.trial import SimTrialBackend, TrialSpec
+from repro.core.trial import TrialSpec
 from repro.tuner.events import (HourRotation, MetricReported, RevocationNotice,
                                 TrialFinished, TrialRevoked, TrialStarted)
 from repro.tuner.scheduler import CONTINUE, Decision, DecisionKind, Scheduler
@@ -132,7 +133,7 @@ class EngineConfig:
     exact_ticks: bool = dataclasses.field(default_factory=_exact_ticks_default)
 
 
-def build_engine(market: SpotMarket, backend: SimTrialBackend, revpred,
+def build_engine(market: SpotMarket, backend: TrialBackend, revpred,
                  seed: int = 0, **engine_kw) -> "ExecutionEngine":
     """Standard construction: fresh perf matrix + Eq.-2 provisioner around a
     market/backend pair.  Every driver (examples, benchmarks, tests, the
@@ -172,7 +173,7 @@ class ProvisionBatch:
 class ExecutionEngine:
     """Runs trials on the transient market; consults a Scheduler for policy."""
 
-    def __init__(self, market: SpotMarket, backend: SimTrialBackend,
+    def __init__(self, market: SpotMarket, backend: TrialBackend,
                  provisioner: Provisioner, config: Optional[EngineConfig] = None):
         self.market = market
         self.backend = backend
@@ -181,6 +182,18 @@ class ExecutionEngine:
         self.scheduler: Scheduler = Scheduler()
         self._drain_promos = False
         self._has_preview = False
+        # backends that override the protocol's snapshot/restore no-ops get
+        # the real lifecycle calls; for the sim (and legacy duck-typed
+        # backends) the checkpoint hot path stays exactly the legacy
+        # assignment.  Same type-level gating pattern as bind()'s.
+        bt = type(backend)
+        self._backend_snapshots = (
+            getattr(bt, "snapshot", TrialBackend.snapshot)
+            is not TrialBackend.snapshot)
+        self._backend_restores = (
+            getattr(bt, "restore", TrialBackend.restore)
+            is not TrialBackend.restore)
+        self._ckpt_time_fn = getattr(backend, "checkpoint_time", None)
         self.states: List[TrialState] = []
         self._by_key: Dict[str, TrialState] = {}
         self._active: List[TrialState] = []
@@ -227,10 +240,23 @@ class ExecutionEngine:
 
     # ------------------------------------------------------------- helpers
     def _ckpt_time(self, st: TrialState) -> float:
+        # checkpoint bytes/time come from the backend: the default protocol
+        # implementation prices model_bytes at the engine's bandwidth knob
+        # (the legacy arithmetic, bit-exact); a training backend answers
+        # from its object store's measured transfer model
+        if self._ckpt_time_fn is not None:
+            return self._ckpt_time_fn(st.spec, self.cfg.ckpt_bandwidth_bps)
         return self.backend.model_bytes(st.spec) / self.cfg.ckpt_bandwidth_bps
 
     def _checkpoint(self, st: TrialState):
-        st.ckpt_steps = st.steps
+        if self._backend_snapshots:
+            # real snapshot: the backend persists actual training state and
+            # answers with the step that is durable (the deadline gate may
+            # pin it to an older snapshot for oversized models)
+            st.ckpt_steps = self.backend.snapshot(
+                st.spec, st.steps, self.cfg.notice_s)
+        else:
+            st.ckpt_steps = st.steps
         st.ckpt_seconds += self._ckpt_time(st)
 
     def _release(self, st: TrialState, revoked: bool) -> dict:
@@ -252,6 +278,10 @@ class ExecutionEngine:
         st.alloc = alloc
         st.choice = choice
         restore = self._ckpt_time(st) if st.steps > 0 else 0.0
+        if self._backend_restores and st.steps > 0:
+            # elastic re-shard path: rehydrate real training state from the
+            # durable snapshot before compute resumes on the new slice
+            self.backend.restore(st.spec, st.ckpt_steps)
         st.restore_seconds += restore
         st.ready_at = self.t + self.cfg.deploy_delay_s + restore
         st.alloc_start_steps = st.steps

@@ -22,12 +22,15 @@ Restated against the engine's decision vocabulary:
     with a *perturbed* copy of a top-quantile member's config (one HP dim
     moved to an adjacent grid value) or a *resample* (fresh grid point).
 
-Simulation caveat, stated once: trial quality curves are ground-truth
-functions of the HP config, so a replacement cannot inherit its donor's
-*weights* — exploit/explore here transfers the config neighborhood, not
-the checkpoint, and replacements start from step 0 paying their own way.
-The cost accounting (which is what the transient engine is about) is
-therefore conservative.
+Weight inheritance: a perturbed replacement declares its donor via
+``TrialSpec.inherit = (donor_key, milestone_step)`` — under the
+``sim`` backend the field is inert (quality curves are ground-truth
+functions of the HP config, so replacements pay their own way from step 0
+and the cost accounting stays conservative), while under the ``training``
+backend (``repro.backends.training``) the replacement's params *and*
+optimizer moments are seeded from the donor's real checkpointed state at
+the declared milestone — the genuine PBT exploit step.  Resamples always
+start fresh.
 
 ``preview_metrics`` mirrors ASHA's: only milestone crossings do anything,
 so the boundary-jumping fast path skips every inert metric point.
@@ -115,17 +118,25 @@ class PBTScheduler(Scheduler):
                 promos[key] = self._targets[key]
         return promos
 
-    def exploit_candidates(self) -> List[dict]:
-        """Top-quantile configs at the latest milestone with results — the
-        donor pool the paired searcher perturbs (best first)."""
+    def exploit_donors(self) -> List[tuple]:
+        """Top-quantile donors at the latest milestone with results, as
+        ``(trial_key, hp, milestone_step)`` best first — the pool the paired
+        searcher perturbs.  The step is the *declared* milestone (snapped to
+        the ``val_every`` grid), so replacements that inherit the donor's
+        checkpoint reference a deterministic, backend-materializable step."""
         for m in reversed(range(len(self.milestones))):
             res = self._results[m]
             if res:
                 kill = int(len(res) * self.trunc_frac)
                 order = sorted(res, key=res.get)
                 keep = order[:max(1, len(res) - kill)]
-                return [self._configs[k] for k in keep]
+                return [(k, self._configs[k], self.milestones[m])
+                        for k in keep]
         return []
+
+    def exploit_candidates(self) -> List[dict]:
+        """Legacy view of ``exploit_donors``: the donor configs alone."""
+        return [hp for _, hp, _ in self.exploit_donors()]
 
     # ------------------------------------------------------------- events
     def on_event(self, event, view) -> Decision:
@@ -246,37 +257,44 @@ class PBTSearcher(Searcher):
         """Tuner wiring hook: the exploit donor pool lives on the scheduler."""
         self._sched = scheduler
 
-    def _donors(self) -> List[dict]:
-        return (self._sched.exploit_candidates()
-                if self._sched is not None
-                and hasattr(self._sched, "exploit_candidates") else [])
+    def _donors(self) -> List[tuple]:
+        """Donor pool as ``(key, hp, milestone_step)`` tuples."""
+        if self._sched is not None and hasattr(self._sched, "exploit_donors"):
+            return self._sched.exploit_donors()
+        return []
 
     def suggest(self) -> Optional[TrialSpec]:
         if self.grid is None:
             return self._suggest_continuous()
         if self._initial:
-            i = self._initial.pop(0)
+            i, inherit = self._initial.pop(0), None
         else:
-            i = self._next_replacement()
-            if i is None:
+            repl = self._next_replacement()
+            if repl is None:
                 return None
+            i, inherit = repl
             self._used_idx.add(i)
-        return TrialSpec(self.workload, self.grid[i], i)
+        return TrialSpec(self.workload, self.grid[i], i, inherit=inherit)
 
     # ----------------------------------------------- explore (finite space)
     def _unused(self) -> List[int]:
         return [i for i in range(len(self.grid)) if i not in self._used_idx]
 
-    def _next_replacement(self) -> Optional[int]:
+    def _next_replacement(self) -> Optional[tuple]:
+        """Next replacement as ``(grid_index, inherit)``; perturbed copies
+        carry the donor's ``(key, milestone_step)`` so backends with real
+        state resume from the donor checkpoint, resamples start fresh.  The
+        RNG draw sequence is identical to the pre-inheritance code — sim
+        results stay bit-exact."""
         unused = self._unused()
         if not unused:
             return None
         donors = self._donors()
         if not donors:
-            return int(self._rng.choice(unused))
+            return int(self._rng.choice(unused)), None
         if self._rng.uniform() < self.resample_prob:
-            return int(self._rng.choice(unused))          # explore: resample
-        donor = donors[int(self._rng.integers(len(donors)))]
+            return int(self._rng.choice(unused)), None    # explore: resample
+        dkey, donor, dstep = donors[int(self._rng.integers(len(donors)))]
         dims = self.space.dims
         for d in self._rng.permutation(len(dims)):
             key, domain = dims[int(d)]
@@ -285,8 +303,9 @@ class PBTSearcher(Searcher):
                 hp[key] = nv
                 i = self._idx_of.get(self._cfg_key(hp))
                 if i is not None and i not in self._used_idx:
-                    return i                              # explore: perturb
-        return int(self._rng.choice(unused))   # donor neighborhood exhausted
+                    return i, (dkey, dstep)               # explore: perturb
+        # donor neighborhood exhausted
+        return int(self._rng.choice(unused)), None
 
     # ------------------------------------------- explore (continuous space)
     def _suggest_continuous(self) -> Optional[TrialSpec]:
@@ -295,13 +314,15 @@ class PBTSearcher(Searcher):
         donors = self._donors()
         # hash-duplicate rejection, same exhaustion cap as sample_distinct
         for _ in range(self.space.MAX_DUP_MISSES):
+            inherit = None
             if not donors or self._rng.uniform() < self.resample_prob:
                 hp = self.space.sample(self._rng)
             else:
-                donor = donors[int(self._rng.integers(len(donors)))]
+                dkey, donor, dstep = donors[int(self._rng.integers(len(donors)))]
                 hp = self.space.neighbor(donor, self._rng)
+                inherit = (dkey, dstep)
             h = self.space.config_hash(hp)
             if h not in self._used:
                 self._used.add(h)
-                return TrialSpec(self.workload, hp)
+                return TrialSpec(self.workload, hp, inherit=inherit)
         return None

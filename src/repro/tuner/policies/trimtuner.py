@@ -20,6 +20,13 @@ idle path:
     a transient market is not the same ordering as EI alone because step
     prices differ across configs (batch size and depth move step time).
 
+Refinement-wave suggestions additionally declare a *warm start*: when the
+best-observed config differs from the proposed one in a single HP dim, the
+suggestion carries ``TrialSpec.inherit = (donor_key, donor_step)`` (donor
+step snapped down to the metric grid) — inert under the sim backend, real
+weight inheritance under ``repro.backends.training``, mirroring how
+TrimTuner promotes sub-sampled runs instead of restarting them.
+
 Everything is closed-form numpy (no new dependencies) and fully
 deterministic given the seed and the feedback sequence, which is what the
 sweep's batched == sequential contract requires.
@@ -86,11 +93,12 @@ class TrimTunerSearcher(Searcher):
         order = rng.permutation(len(self.grid))
         n0 = min(initial, self.max_trials)
         # bootstrap wave: cheap sub-sampled evaluations of a random design
-        self._queue: List[Tuple[int, float]] = [
-            (int(i), sub_frac) for i in order[:n0]]
-        self._suggested = {i for i, _ in self._queue}
+        self._queue: List[Tuple[int, float, Optional[tuple]]] = [
+            (int(i), sub_frac, None) for i in order[:n0]]
+        self._suggested = {i for i, _, _ in self._queue}
         # (grid idx, fidelity in (0,1], metric, billed $, steps)
         self._obs: List[Tuple[int, float, float, float, float]] = []
+        self._keys: dict = {}    # grid idx -> trial key (warm-start donors)
 
     # ------------------------------------------------------------ protocol
     def suggest(self) -> Optional[TrialSpec]:
@@ -98,8 +106,9 @@ class TrimTunerSearcher(Searcher):
             self._refine()
         if not self._queue:
             return None
-        i, frac = self._queue.pop(0)
-        return TrialSpec(self.workload, self.grid[i], i, budget_frac=frac)
+        i, frac, inherit = self._queue.pop(0)
+        return TrialSpec(self.workload, self.grid[i], i, budget_frac=frac,
+                         inherit=inherit)
 
     def on_trial_finished(self, view) -> None:
         """Rich feedback hook: final metric + the engine's per-trial billed
@@ -112,6 +121,7 @@ class TrimTunerSearcher(Searcher):
         self._obs.append((view.spec.idx, max(fid, 1e-3),
                           float(view.metrics_vals[-1]), cost,
                           max(float(view.steps), 1.0)))
+        self._keys[view.spec.idx] = view.spec.key
 
     # --------------------------------------------------------- acquisition
     def _design(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -157,5 +167,23 @@ class TrimTunerSearcher(Searcher):
         take = min(self.batch, self.max_trials - len(self._suggested))
         for j in np.argsort(-acq, kind="stable")[:take]:
             i = cand[int(j)]
-            self._queue.append((i, 1.0))      # refinement waves: full budget
+            # refinement waves: full budget, warm-started where a
+            # one-dim-away observed donor exists
+            self._queue.append((i, 1.0, self._warm_start(i)))
             self._suggested.add(i)
+
+    def _warm_start(self, i: int) -> Optional[tuple]:
+        """Donor declaration for candidate ``i``: the best observed config,
+        iff it differs in exactly one HP dim, at its observed progress
+        snapped down to the metric grid.  Deterministic in the feedback
+        sequence (ties resolve to the earliest observation)."""
+        if not self._obs:
+            return None
+        best = min(self._obs, key=lambda o: o[2])
+        donor_hp, cand_hp = self.grid[best[0]], self.grid[i]
+        if sum(donor_hp[k] != cand_hp[k] for k in donor_hp) != 1:
+            return None
+        ve = self.workload.val_every
+        step = int(best[4] // ve) * ve
+        key = self._keys.get(best[0])
+        return (key, step) if key and step > 0 else None

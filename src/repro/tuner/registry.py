@@ -140,6 +140,31 @@ def make_searcher(name: str, workload: Workload,
     return factory(workload, {**(params or {}), **kw})
 
 
+def describe_json() -> dict:
+    """Machine-readable registry dump: schedulers, searchers (with their
+    capability flags), paired-policy defaults, and the trial-backend
+    registry — the contract ``repro.sweep.spec.ScenarioSpec.validate``
+    checks combos against, and the ``--json`` CLI output."""
+    from repro.backends import BACKENDS
+
+    return {
+        "schedulers": {name: {"spaces": ["grid", "continuous"]}
+                       for name in sorted(SCHEDULERS)},
+        "searchers": {
+            name: {
+                "class": _SEARCHER_CLASSES[name].__name__,
+                "supports_continuous": bool(getattr(
+                    _SEARCHER_CLASSES[name], "supports_continuous", False)),
+                "live_results": bool(getattr(
+                    _SEARCHER_CLASSES[name], "live_results", False)),
+            }
+            for name in sorted(SEARCHERS)},
+        "policy_defaults": {k: dict(v) for k, v in POLICY_DEFAULTS.items()},
+        "backends": {name: dict(meta) for name, meta in BACKENDS.items()},
+        "spaces": ["grid", "continuous"],
+    }
+
+
 def describe() -> str:
     """Human-readable registry dump: every policy with its space support
     and paired defaults — the `python -m repro.tuner.registry` CLI."""
@@ -160,8 +185,28 @@ def describe() -> str:
         live = " live-feedback" if getattr(cls, "live_results", False) else ""
         lines.append(f"  {name:<14} spaces: {spaces:<21} "
                      f"[{cls.__name__}]{live}")
+    from repro.backends import BACKENDS
+
+    lines += ["", "backends", "--------"]
+    for name, meta in BACKENDS.items():
+        wl = ("workloads: " + ", ".join(meta["workloads"])
+              if meta["workloads"] else "workloads: any")
+        dflt = " (default)" if meta.get("default") else ""
+        lines.append(f"  {name:<14} spaces: {'+'.join(meta['spaces']):<21} "
+                     f"[{meta['class']}] {wl}{dflt}")
     return "\n".join(lines)
 
 
 if __name__ == "__main__":
-    print(describe())
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        description="Dump the scheduler/searcher/backend registry")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable JSON instead of the table")
+    ns = ap.parse_args()
+    if ns.json:
+        print(json.dumps(describe_json(), indent=2))
+    else:
+        print(describe())
