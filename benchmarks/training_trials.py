@@ -37,7 +37,7 @@ def _grid_rows(arch: str, theta: float) -> list[tuple]:
     errs, preds, finals = [], [], []
     for i, hp in enumerate(w.hp_grid()):
         t = TrialSpec(w, hp, i)
-        vals = np.array(be.metric_range(t, int(steps[0]), int(steps[-1])))
+        vals = np.array(be.metric_range(t, 1, len(steps)))
         tf = be.true_final(t)
         p = ec.predict_final(steps[:cut], vals[:cut], w.max_trial_steps)
         errs.append(abs(p - tf) / tf)

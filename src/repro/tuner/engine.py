@@ -248,13 +248,18 @@ class ExecutionEngine:
             return self._ckpt_time_fn(st.spec, self.cfg.ckpt_bandwidth_bps)
         return self.backend.model_bytes(st.spec) / self.cfg.ckpt_bandwidth_bps
 
-    def _checkpoint(self, st: TrialState):
+    def _checkpoint(self, st: TrialState, deadline_s: Optional[float] = None):
+        """Persist trial state.  ``deadline_s`` is the transfer budget the
+        snapshot must fit (the revocation-notice window); every other
+        checkpoint event — hour rotation, pause, plateau stop, finish —
+        has no deadline, so oversized models still persist there."""
         if self._backend_snapshots:
             # real snapshot: the backend persists actual training state and
             # answers with the step that is durable (the deadline gate may
             # pin it to an older snapshot for oversized models)
             st.ckpt_steps = self.backend.snapshot(
-                st.spec, st.steps, self.cfg.notice_s)
+                st.spec, st.steps,
+                float("inf") if deadline_s is None else deadline_s)
         else:
             st.ckpt_steps = st.steps
         st.ckpt_seconds += self._ckpt_time(st)
@@ -472,7 +477,7 @@ class ExecutionEngine:
             # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26)
             if a.t_revoke is not None and not st.notice_handled \
                     and self.t >= a.t_revoke - cfg.notice_s:
-                self._checkpoint(st)
+                self._checkpoint(st, deadline_s=cfg.notice_s)
                 st.notice_handled = True
                 self.events.append((self.t, "notice", st.spec.key))
                 self._dispatch(RevocationNotice(self.t, st.key, a.t_revoke), st)
