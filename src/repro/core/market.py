@@ -128,15 +128,38 @@ def _trace_draws(inst: InstanceType, minutes: int, seed: int, discount: float,
             "micro": micro}
 
 
+_SHAPE_CACHE: dict = {}
+
+
+def _diurnal_curve(minutes: int) -> np.ndarray:
+    """``1 + 0.15 sin(2π(tod − ¼))`` — pure function of the trace length."""
+    curve = _SHAPE_CACHE.get(("diurnal", minutes))
+    if curve is None:
+        tod = (np.arange(minutes) % 1440) / 1440.0
+        curve = 1.0 + 0.15 * np.sin(2 * np.pi * (tod - 0.25))
+        curve.flags.writeable = False
+        _SHAPE_CACHE[("diurnal", minutes)] = curve
+    return curve
+
+
+def _spike_ramp(n: int) -> np.ndarray:
+    """``linspace(1, 0, n)²`` — pure function of the spike length."""
+    ramp = _SHAPE_CACHE.get(("ramp", n))
+    if ramp is None:
+        ramp = np.linspace(1.0, 0.0, n) ** 2
+        ramp.flags.writeable = False
+        _SHAPE_CACHE[("ramp", n)] = ramp
+    return ramp
+
+
 def _trace_finish(inst: InstanceType, minutes: int, x: np.ndarray,
                   draws: dict) -> np.ndarray:
     """Diurnal swell, spikes, repricing holds, micro-drift on an OU path."""
     # diurnal demand (peaks mid-day)
-    tod = (np.arange(minutes) % 1440) / 1440.0
-    x = x * (1.0 + 0.15 * np.sin(2 * np.pi * (tod - 0.25)))
+    x = x * _diurnal_curve(minutes)
     for start, ln, level in draws["spikes"]:
         end = min(minutes, start + ln)
-        ramp = np.linspace(1.0, 0.0, end - start) ** 2
+        ramp = _spike_ramp(end - start)
         x[start:end] = np.maximum(x[start:end], level * (1 - 0.5 * ramp))
     x = np.clip(x, 0.05 * inst.od_price, 2.0 * inst.od_price)
     # spot prices move in discrete repricing events: hold for random runs,
@@ -225,6 +248,24 @@ def _cache_put(cache: Dict[int, tuple], key: int, val: tuple) -> None:
 
 _CROSS_BLOCK = 512   # minutes per block of the acquire() crossing index
 
+# trailing-window means, shared across market replicas of one trace:
+# (trace id, minute, window minutes) -> (trace, value); traces are immutable
+_AVG_CACHE: Dict[tuple, tuple] = {}
+_AVG_CACHE_MAX = 1 << 18
+
+# per-trace prices as plain float lists (identical float64 values) — minute
+# reads on the deploy hot path become list indexing, no numpy scalar boxing
+_PRICE_LIST_CACHE: Dict[int, tuple] = {}
+
+
+def _shared_pricelist(tr: np.ndarray) -> list:
+    hit = _PRICE_LIST_CACHE.get(id(tr))
+    if hit is not None and hit[0] is tr:
+        return hit[1]
+    pl = tr.tolist()
+    _cache_put(_PRICE_LIST_CACHE, id(tr), (tr, pl))
+    return pl
+
 
 def _shared_prefix(tr: np.ndarray) -> np.ndarray:
     """P[i] = sum of the first i per-minute prices, float64."""
@@ -253,6 +294,9 @@ def clear_trace_caches() -> None:
     _TRACE_CACHE.clear()
     _PREFIX_CACHE.clear()
     _BLOCKMAX_CACHE.clear()
+    _SHAPE_CACHE.clear()
+    _AVG_CACHE.clear()
+    _PRICE_LIST_CACHE.clear()
 
 
 def load_csv_traces(text: str, pool: List[InstanceType], minutes: int):
@@ -304,6 +348,9 @@ class SpotMarket:
         self.traces = traces or {
             i.name: synth_trace(i, self.minutes, seed) for i in self.pool}
         self._by_name = {i.name: i for i in self.pool}
+        self._pool_price_memo: Optional[tuple] = None
+        self._pool_avg_memo: Optional[tuple] = None
+        self._pool_rows_memo: Optional[tuple] = None
         self._next_id = 0
         self.allocations: List[Allocation] = []
         self.billed = 0.0
@@ -329,16 +376,15 @@ class SpotMarket:
         bmax = self._block_max(name)
         kb = start_i // _CROSS_BLOCK
         # partial first block
-        seg = tr[start_i:(kb + 1) * _CROSS_BLOCK]
-        hit = seg > max_price
+        hit = tr[start_i:(kb + 1) * _CROSS_BLOCK] > max_price
         if hit.any():
-            return start_i + int(np.argmax(hit))
+            return start_i + int(hit.argmax())
         over = np.nonzero(bmax[kb + 1:] > max_price)[0]
         if not len(over):
             return None
         b0 = kb + 1 + int(over[0])
         seg = tr[b0 * _CROSS_BLOCK:(b0 + 1) * _CROSS_BLOCK]
-        return b0 * _CROSS_BLOCK + int(np.argmax(seg > max_price))
+        return b0 * _CROSS_BLOCK + int((seg > max_price).argmax())
 
     # ----------------------------------------------------------- price query
     def price(self, inst: InstanceType, t: float) -> float:
@@ -346,14 +392,61 @@ class SpotMarket:
         i = min(int(t / MINUTE), len(tr) - 1)
         return float(tr[i])
 
+    def pool_prices(self, t: float) -> Dict[str, float]:
+        """``price`` for every pool member at ``t`` as one memoized dict —
+        deployment bursts share a minute, so the per-candidate trace reads
+        collapse to dict gets (values identical to ``price``)."""
+        minute = int(t / MINUTE)
+        ent = self._pool_price_memo
+        if ent is None or ent[0] != minute:
+            prices = {}
+            for n, tr in self.traces.items():
+                pl = _shared_pricelist(tr)
+                prices[n] = pl[minute] if minute < len(pl) else pl[-1]
+            ent = self._pool_price_memo = (minute, prices)
+        return ent[1]
+
+    def pool_avgs(self, t: float) -> Dict[str, float]:
+        """``avg_price`` (default window) for every pool member at ``t`` as
+        one memoized dict — the Eq.-2 scoring loop reads the trailing-hour
+        mean per candidate, and deploy bursts share a minute."""
+        minute = int(t / MINUTE)
+        ent = self._pool_avg_memo
+        if ent is None or ent[0] != minute:
+            avgs = {i.name: self.avg_price(i, t) for i in self.pool}
+            ent = self._pool_avg_memo = (minute, avgs)
+        return ent[1]
+
+    def pool_price_rows(self, t: float) -> tuple:
+        """(minute, prices, trailing-hour avgs) as lists aligned with
+        ``self.pool`` — the fused deploy loop indexes by pool position
+        instead of name.  Values identical to ``price``/``avg_price``."""
+        minute = int(t / MINUTE)
+        ent = self._pool_rows_memo
+        if ent is None or ent[0] != minute:
+            prices = self.pool_prices(t)
+            avgs = self.pool_avgs(t)
+            ent = self._pool_rows_memo = (
+                minute, [prices[i.name] for i in self.pool],
+                [avgs[i.name] for i in self.pool])
+        return ent
+
     def avg_price(self, inst: InstanceType, t: float, window_s: float = HOUR) -> float:
         """Trailing-window mean price — O(1) via the per-trace prefix sums
-        (queried for every pool member on every Eq.-2 deployment)."""
+        (queried for every pool member on every Eq.-2 deployment).  Memoized
+        per (instance, minute, window): traces are immutable and deploys
+        cluster on ticks, so most of a deploy burst hits the memo."""
         tr = self.traces[inst.name]
-        hi = min(int(t / MINUTE), len(tr) - 1) + 1
-        lo = max(0, hi - int(window_s / MINUTE))
-        P = self._price_prefix(inst.name)
-        return (P[hi] - P[lo]) / (hi - lo)
+        key = (id(tr), int(t / MINUTE), window_s)
+        ent = _AVG_CACHE.get(key)
+        if ent is None or ent[0] is not tr:
+            hi = min(key[1], len(tr) - 1) + 1
+            lo = max(0, hi - int(window_s / MINUTE))
+            P = self._price_prefix(inst.name)
+            if len(_AVG_CACHE) >= _AVG_CACHE_MAX:
+                _AVG_CACHE.clear()
+            ent = _AVG_CACHE[key] = (tr, (P[hi] - P[lo]) / (hi - lo))
+        return ent[1]
 
     def horizon_s(self) -> float:
         return self.minutes * MINUTE

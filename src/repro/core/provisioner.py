@@ -23,7 +23,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.market import HOUR, InstanceType, SpotMarket
+from repro.core.market import HOUR, MINUTE, InstanceType, SpotMarket
 from repro.core.trial import TrialSpec
 
 
@@ -46,8 +46,10 @@ class PerfModel:
         self._observed: Dict[Tuple[str, str], bool] = {}
 
     def get(self, inst: InstanceType, trial: TrialSpec) -> float:
-        return self._m.get((inst.name, trial.key),
-                           self.c0 / inst.chips ** self.prior_exp)
+        v = self._m.get((inst.name, trial.key))
+        if v is None:      # evaluate the prior only on a miss (hot path)
+            v = self.c0 / inst.chips ** self.prior_exp
+        return v
 
     def update(self, inst: InstanceType, trial: TrialSpec, secs_per_step: float):
         key = (inst.name, trial.key)
@@ -101,6 +103,31 @@ class Provisioner:
         self.rng = np.random.default_rng(seed)
         self.delta_lo = delta_lo
         self.delta_hi = delta_hi
+        # pool-aligned constants hoisted off the deploy hot path: bid scale
+        # (od_price / 0.33), names, and the PerfModel prior (the exact
+        # ``get`` fallback expression, precomputed per pool member)
+        self._scales = [i.od_price / 0.33 for i in market.pool]
+        self._names = [i.name for i in market.pool]
+        self._priors = [perf.c0 / i.chips ** perf.prior_exp
+                        for i in market.pool]
+        # block-buffered delta draws: Generator.uniform fills element-wise
+        # from the bit stream, so dispensing n values from a pre-drawn block
+        # yields the exact doubles n direct uniform(lo, hi, n) calls would
+        self._ubuf = np.empty(0)
+        self._upos = 0
+
+    def _deltas(self, n: int) -> list:
+        pos = self._upos
+        buf = self._ubuf
+        end = pos + n
+        if end > len(buf):
+            buf = np.concatenate([
+                buf[pos:], self.rng.uniform(self.delta_lo, self.delta_hi,
+                                            max(1024, n))])
+            self._ubuf = buf
+            pos, end = 0, n
+        self._upos = end
+        return buf[pos:end].tolist()
 
     def candidates(self, t: float, trial: TrialSpec,
                    exclude: Optional[set] = None) -> list:
@@ -111,34 +138,100 @@ class Provisioner:
         no draw), so a caller may draw candidates for several trials first
         and batch the revocation predictions afterwards without disturbing
         the replica's RNG stream."""
-        cands = []
-        for inst in self.market.pool:
-            if exclude and inst.name in exclude:
-                continue
-            # delta scaled to the market's price level (paper's [1e-5, 0.2]
-            # interval assumes sub-dollar instances — see revpred.py)
-            max_price = self.market.price(inst, t) + float(
-                self.rng.uniform(self.delta_lo, self.delta_hi)) * (
-                inst.od_price / 0.33)
-            cands.append((inst, max_price))
-        assert cands, "empty pool"
-        return cands
+        pool = self.market.pool
+        names = self._names
+        scales = self._scales
+        if exclude:
+            keep = [k for k, n in enumerate(names) if n not in exclude]
+            pool = [pool[k] for k in keep]
+            names = [names[k] for k in keep]
+            scales = [scales[k] for k in keep]
+        assert pool, "empty pool"
+        # delta scaled to the market's price level (paper's [1e-5, 0.2]
+        # interval assumes sub-dollar instances — see revpred.py).  One array
+        # draw: a numpy Generator fills arrays element-wise from the same
+        # stream, so this consumes identical draws to the legacy
+        # one-uniform-per-candidate loop (excluded markets draw nothing)
+        deltas = self._deltas(len(pool))
+        prices = self.market.pool_prices(t)
+        return [(inst, prices[n] + d * s)
+                for inst, n, d, s in zip(pool, names, deltas, scales)]
 
     def choose(self, t: float, trial: TrialSpec, cands, ps) -> Choice:
         """Eq. 2 argmin over drawn candidates and their p(revoke) answers."""
-        best: Optional[Choice] = None
+        perf_get = self.perf.get
+        avgs = self.market.pool_avgs(t)
+        best = best_key = None
         for (inst, max_price), p in zip(cands, ps):
-            p = min(max(float(p), 0.0), 1.0)
-            m = self.perf.get(inst, trial)
-            avg = self.market.avg_price(inst, t)
+            p = float(p)
+            if p < 0.0:
+                p = 0.0
+            elif p > 1.0:
+                p = 1.0
+            m = perf_get(inst, trial)
+            avg = avgs[inst.name]
             s_cost = m * (1.0 - p) * avg / HOUR
             # tie-break expected-free candidates (p -> 1 zeroes Eq. 2) by the
             # downside cost — what a step costs if the refund never arrives
             # (e.g. the trial finishes inside the hour)
             key = (s_cost, m * avg)
-            if best is None or key < best_key:
-                best, best_key = Choice(inst, max_price, p, s_cost), key
-        return best
+            if best_key is None or key < best_key:
+                best, best_key = (inst, max_price, p, s_cost), key
+        return Choice(*best)
+
+    def fused_supported(self) -> bool:
+        """True when the predictor answers per-candidate p(revoke) from
+        local state (constant or oracle), so ``best_fused`` applies."""
+        return (getattr(self.revpred, "CONST_P", None) is not None
+                or getattr(self.revpred, "pool_label_fm", None) is not None)
+
+    def best_fused(self, t: float, trial: TrialSpec,
+                   exclude: Optional[set] = None) -> Choice:
+        """getBestInst with the candidate draw, revocation labels, and the
+        Eq.-2 argmin fused into one pool loop — bit-identical floats and RNG
+        consumption to ``choose(t, trial, cands, predict_pool_pairs(cands,
+        t))`` over ``candidates(t, trial, exclude)``, with no intermediate
+        candidate/response lists.  Only valid when ``fused_supported()``."""
+        market = self.market
+        pool = market.pool
+        names = self._names
+        rp = self.revpred
+        const_p = getattr(rp, "CONST_P", None)
+        fms = None if const_p is not None else rp.pool_fm_rows()
+        minute, prices, avgs = market.pool_price_rows(t)
+        scales = self._scales
+        priors = self._priors
+        idxs = range(len(pool))
+        if exclude:
+            idxs = [k for k in idxs if names[k] not in exclude]
+            assert idxs, "empty pool"
+        deltas = self._deltas(len(idxs))
+        perf_m = self.perf._m
+        tkey = trial.key
+        best = best_key = None
+        for k, d in zip(idxs, deltas):
+            mp = prices[k] + d * scales[k]
+            if const_p is not None:
+                p = const_p
+            else:
+                fml, L = fms[k]
+                if minute < L:
+                    p = 1.0 if fml[minute] > mp else 0.0
+                else:
+                    p = rp.predict(pool[k], t, mp)
+                    if p < 0.0:
+                        p = 0.0
+                    elif p > 1.0:
+                        p = 1.0
+            m = perf_m.get((names[k], tkey))
+            if m is None:
+                m = priors[k]
+            avg = avgs[k]
+            s_cost = m * (1.0 - p) * avg / HOUR
+            key = (s_cost, m * avg)
+            if best_key is None or key < best_key:
+                best, best_key = (pool[k], mp, p, s_cost), key
+        return Choice(*best)
 
     def predict_candidates(self, t: float, cands) -> list:
         """p(revoke) per candidate — pool-batched when the predictor can."""
@@ -162,5 +255,10 @@ class ZeroRevPred:
     """p ≡ 0: degenerates Eq. 2 to pure (speed × price) — the paper's §V-A
     stable-market scenario, and an ablation baseline."""
 
+    CONST_P = 0.0       # enables the provisioner's fused deploy loop
+
     def predict(self, inst, t, max_price) -> float:
         return 0.0
+
+    def predict_pool_pairs(self, cands, t) -> list:
+        return [0.0] * len(cands)

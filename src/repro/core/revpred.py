@@ -589,12 +589,14 @@ def _sliding_max(arr: np.ndarray, w: int) -> np.ndarray:
 # the index once per market seed instead of once per replica.  Bounded FIFO
 # so un-memoized traces (CSV replays) don't pin entries forever.
 _FUT_MAX_CACHE: Dict[int, tuple] = {}
+_FM_LIST_CACHE: Dict[int, tuple] = {}   # same maxima as plain lists
 _FUT_MAX_CACHE_MAX = 512
 
 
 def clear_prediction_caches() -> None:
     """Drop shared prediction indices (cold-start benchmarking)."""
     _FUT_MAX_CACHE.clear()
+    _FM_LIST_CACHE.clear()
 
 
 class OracleRevPred:
@@ -608,6 +610,7 @@ class OracleRevPred:
 
     def __init__(self, market: SpotMarket):
         self.market = market
+        self._fm_rows = None       # pool-aligned (fm list, len) pairs
 
     def _future_max(self, name: str) -> np.ndarray:
         trace = self.market.traces[name]
@@ -628,6 +631,42 @@ class OracleRevPred:
         if m < len(fm):
             return 1.0 if fm[m] > max_price else 0.0
         return 1.0 if label_revoked(trace, m, max_price) else 0.0
+
+    def pool_label_fm(self, name: str) -> tuple:
+        """(rolling next-hour maxima as a plain float list, length) for one
+        market — the trace-keyed shared cache entry (identical float64
+        values to ``_future_max``); replicas of one market seed share it."""
+        trace = self.market.traces[name]
+        ent = _FM_LIST_CACHE.get(id(trace))
+        if ent is None or ent[0] is not trace:
+            fm = self._future_max(name)
+            if len(_FM_LIST_CACHE) >= _FUT_MAX_CACHE_MAX:
+                _FM_LIST_CACHE.pop(next(iter(_FM_LIST_CACHE)))
+            ent = (trace, fm.tolist(), len(fm))
+            _FM_LIST_CACHE[id(trace)] = ent
+        return ent[1], ent[2]
+
+    def pool_fm_rows(self) -> list:
+        """``pool_label_fm`` for every pool member, aligned with
+        ``market.pool`` — built once per predictor (traces are immutable
+        for a market's lifetime)."""
+        ent = self._fm_rows
+        if ent is None:
+            ent = self._fm_rows = [self.pool_label_fm(i.name)
+                                   for i in self.market.pool]
+        return ent
+
+    def predict_pool_pairs(self, cands, t: float) -> list:
+        """``predict`` over one drawn candidate list without per-call array
+        indexing: a few dict gets and float compares per pool member via
+        ``pool_label_fm``."""
+        m = int(t / MINUTE)
+        out = []
+        for inst, mp in cands:
+            fml, L = self.pool_label_fm(inst.name)
+            out.append((1.0 if fml[m] > mp else 0.0) if m < L
+                       else self.predict(inst, t, mp))
+        return out
 
 
 def evaluate(pred: TrainedPredictor, data: dict) -> dict:

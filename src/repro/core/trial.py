@@ -222,7 +222,7 @@ def _hp_unit(rng_seed: int, name: str, val) -> float:
 
 # Per-tick step-time jitter is a pure function of (workload.seed, int(t)) —
 # process-wide cache, shared across backends / market replicas / engine runs.
-_JITTER_CACHE: Dict[tuple, np.ndarray] = {}
+_JITTER_CACHE: Dict[tuple, list] = {}   # key -> [raw, clipped arr, clipped list]
 _JITTER_CHUNK = 4096   # ticks synthesized per cache fill
 
 
@@ -232,19 +232,27 @@ def _jitter_ticks(w_seed: int, tick_s: float, k1: int) -> np.ndarray:
     Entry k is the exact draw ``SimTrialBackend.step_time`` makes at
     ``noisy_t = k * tick_s`` — the same ``SeedSequence([w_seed, int(t)])``
     stream, batch-filled so the event-driven fast path reads a slice instead
-    of building one numpy Generator per skipped tick."""
+    of building one numpy Generator per skipped tick.  The cache entry also
+    carries the floor-clipped (``max(j, 0.5)``) values as an array and as a
+    plain float list — same float64 values — for the short-window scalar
+    path in ``noisy_step_times``."""
+    return _jitter_entry(w_seed, tick_s, k1)[0]
+
+
+def _jitter_entry(w_seed: int, tick_s: float, k1: int) -> list:
     key = (w_seed, tick_s)
-    arr = _JITTER_CACHE.get(key)
-    have = 0 if arr is None else len(arr)
+    ent = _JITTER_CACHE.get(key)
+    have = 0 if ent is None else len(ent[0])
     if k1 >= have:
         need = ((k1 + 1 + _JITTER_CHUNK - 1) // _JITTER_CHUNK) * _JITTER_CHUNK
         ext = np.empty(need - have, np.float64)
         ss, rng = np.random.SeedSequence, np.random.default_rng
         for i in range(len(ext)):
             ext[i] = rng(ss([w_seed, int((have + i) * tick_s)])).normal(1.0, 0.02)
-        arr = ext if arr is None else np.concatenate([arr, ext])
-        _JITTER_CACHE[key] = arr
-    return arr
+        arr = ext if ent is None else np.concatenate([ent[0], ext])
+        clip = np.maximum(arr, 0.5)
+        ent = _JITTER_CACHE[key] = [arr, clip, clip.tolist()]
+    return ent
 
 
 # base step times and loss curves are pure functions of (workload, hp, idx,
@@ -337,10 +345,10 @@ class SimTrialBackend(TrialBackend):
         base-step-time lookup when the caller already holds it."""
         if base is None:
             base = self.base_step_time(trial, inst)
-        jit = _jitter_ticks(trial.workload.seed, tick_s, k1)
+        ent = _jitter_entry(trial.workload.seed, tick_s, k1)
         if k1 - k0 < 8:
-            return [base * max(j, 0.5) for j in jit[k0:k1 + 1]]
-        return base * np.maximum(jit[k0:k1 + 1], 0.5)
+            return [base * j for j in ent[2][k0:k1 + 1]]
+        return base * ent[1][k0:k1 + 1]
 
     # ------------------------------------------------------------- quality
     def final_loss(self, trial: TrialSpec) -> float:

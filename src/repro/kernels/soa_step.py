@@ -1,0 +1,216 @@
+"""SoA sweep inner-step kernels: batched EWMA fold + segmented boundary min.
+
+The SoA stepper's per-round compute is (a) folding every touched row's
+deterministic per-tick step-time observations into its perf-matrix EWMA
+entry and (b) the segmented min over the per-row next-boundary ticks that
+replaces the engines' heaps.  The numpy paths below are the default and the
+reference: the columnwise masked fold is bit-exact to the sequential
+per-observation ``PerfModel.update_many`` replay (same per-row op order,
+elementwise float64), and the boundary scan is one ``np.minimum.reduceat``.
+
+``REPRO_SOA_PALLAS=1`` opts the fold into the fused Pallas kernel
+(``soa_step_fused``), which computes both halves in a single ``pallas_call``.
+On this container (CPU) the kernel runs in interpreter mode — useful for
+validation, not speed; on TPU it compiles natively (float64 inputs would
+need an f32 retune there, which is why numpy stays the default).
+``tests/test_kernels.py`` pins kernel == reference.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+_BIG = np.int64(1) << np.int64(60)
+
+
+# ---------------------------------------------------------------- reference
+def ewma_fold_ref(obs: np.ndarray, lens: np.ndarray, m0: np.ndarray,
+                  first: np.ndarray, ewma: np.ndarray) -> np.ndarray:
+    """Fold ``obs[i, :lens[i]]`` into ``m0[i]`` per row, columnwise.
+
+    Rows with ``first[i]`` start from their first observation instead of
+    ``m0`` (the unobserved-prior special case of ``PerfModel.update_many``).
+    Per row this replays ``m = (1-a)*m + a*o`` in observation order with the
+    identical float64 ops, so the result is bit-exact to the sequential
+    fold regardless of how rows are batched."""
+    m = np.where(first, 0.0, m0)
+    fr = first.copy()
+    b = 1.0 - ewma
+    for j in range(obs.shape[1]):
+        col = obs[:, j]
+        valid = j < lens
+        m = np.where(valid & fr, col,
+                     np.where(valid, b * m + ewma * col, m))
+        fr = fr & ~valid
+    return m
+
+
+def ewma_fold_sorted(obs: np.ndarray, lens: np.ndarray, m0: np.ndarray,
+                     first: np.ndarray, ewma: np.ndarray) -> np.ndarray:
+    """Same fold, O(sum(lens)) instead of O(rows * max(lens)).
+
+    Rows are independent, so sorting them by descending length and folding
+    each column over the still-valid *prefix* does the identical per-row
+    float64 op sequence with no masking — bit-exact to ``ewma_fold_ref``
+    while skipping the padded tail entirely (the tick windows are heavily
+    skewed: most rows see a handful of observations, a few see hundreds)."""
+    order = np.argsort(-lens, kind="stable")
+    ln = lens[order]
+    ob = obs[order]
+    a = ewma[order]
+    b = 1.0 - a
+    fr = first[order]
+    m = np.where(fr, 0.0, m0[order])
+    neg = -ln                         # ascending, for prefix-count searches
+    n = int(np.searchsorted(neg, 0, side="left"))      # rows with >=1 obs
+    if n:
+        col = ob[:n, 0]
+        m[:n] = np.where(fr[:n], col, b[:n] * m[:n] + a[:n] * col)
+    for j in range(1, obs.shape[1]):
+        n = int(np.searchsorted(neg, -j, side="left"))  # rows with len > j
+        if not n:
+            break
+        m[:n] = b[:n] * m[:n] + a[:n] * ob[:n, j]
+    out = np.empty_like(m)
+    out[order] = m
+    return out
+
+
+def segmented_min_ref(next_k: np.ndarray, starts: np.ndarray) -> np.ndarray:
+    """Per-segment min of ``next_k`` over contiguous ``starts`` segments —
+    the "next boundary" scan (``_BIG`` rows are the not-running padding)."""
+    return np.minimum.reduceat(next_k, starts)
+
+
+# ------------------------------------------------------------------- pallas
+def _pallas_enabled() -> bool:
+    if os.environ.get("REPRO_SOA_PALLAS", "0") in ("", "0"):
+        return False
+    try:
+        from jax.experimental import pallas  # noqa: F401
+        return True
+    except Exception:  # pragma: no cover - pallas baked into this toolchain
+        return False
+
+
+_FUSED = None
+
+
+def _build_fused():
+    """Build the fused fold + boundary-scan pallas_call (one dispatch)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(obs_ref, lens_ref, m0_ref, first_ref, ewma_ref,
+               nk_ref, rep_ref, m_out, seg_out):
+        a = ewma_ref[:]
+        b = 1.0 - a
+        lens = lens_ref[:]
+        first = first_ref[:]
+
+        def fold(j, carry):
+            m, fr = carry
+            col = obs_ref[:, j]
+            valid = j < lens
+            m = jnp.where(valid & fr, col,
+                          jnp.where(valid, b * m + a * col, m))
+            return m, fr & ~valid
+
+        m0 = jnp.where(first, 0.0, m0_ref[:])
+        m, _ = jax.lax.fori_loop(0, obs_ref.shape[1], fold, (m0, first))
+        m_out[:] = m
+        seg_out[:] = jnp.full(seg_out.shape, _BIG, seg_out.dtype)
+
+        def smin(i, _):
+            rr = rep_ref[i]
+            cur = pl.load(seg_out, (pl.dslice(rr, 1),))
+            val = pl.load(nk_ref, (pl.dslice(i, 1),))
+            pl.store(seg_out, (pl.dslice(rr, 1),), jnp.minimum(cur, val))
+            return 0
+
+        jax.lax.fori_loop(0, nk_ref.shape[0], smin, 0)
+
+    interpret = jax.default_backend() != "tpu"
+
+    def fused(obs, lens, m0, first, ewma, next_k, row_rep, n_reps):
+        call = pl.pallas_call(
+            kernel,
+            out_shape=(jax.ShapeDtypeStruct(m0.shape, jnp.float64),
+                       jax.ShapeDtypeStruct((n_reps,), jnp.int64)),
+            interpret=interpret,
+        )
+        m, seg = call(jnp.asarray(obs), jnp.asarray(lens),
+                      jnp.asarray(m0), jnp.asarray(first),
+                      jnp.asarray(ewma), jnp.asarray(next_k),
+                      jnp.asarray(row_rep))
+        return np.asarray(m), np.asarray(seg)
+
+    return fused
+
+
+def soa_step_fused(obs, lens, m0, first, ewma, next_k, row_rep,
+                   n_reps: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused inner step: (EWMA fold, segmented boundary min) in one kernel
+    dispatch.  Requires pallas (REPRO_SOA_PALLAS=1 path and the kernel
+    test); the stepper's default splits the halves across the numpy refs."""
+    global _FUSED
+    if _FUSED is None:
+        _FUSED = _build_fused()
+    return _FUSED(obs, lens, m0, first, ewma, next_k, row_rep, n_reps)
+
+
+# ----------------------------------------------------------------- dispatch
+_USE_PALLAS: Optional[bool] = None
+
+
+def _use_pallas() -> bool:
+    global _USE_PALLAS
+    if _USE_PALLAS is None:
+        _USE_PALLAS = _pallas_enabled()
+    return _USE_PALLAS
+
+
+def ewma_fold(obs, lens, m0, first, ewma) -> np.ndarray:
+    """Dispatching fold: numpy reference by default, the Pallas kernel's
+    fold half under REPRO_SOA_PALLAS=1 (both bit-exact to sequential)."""
+    if _use_pallas():
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def kernel(obs_ref, lens_ref, m0_ref, first_ref, ewma_ref, m_out):
+            a = ewma_ref[:]
+            b = 1.0 - a
+            lens_v = lens_ref[:]
+
+            def fold(j, carry):
+                m, fr = carry
+                col = obs_ref[:, j]
+                valid = j < lens_v
+                m = jnp.where(valid & fr, col,
+                              jnp.where(valid, b * m + a * col, m))
+                return m, fr & ~valid
+
+            m0v = jnp.where(first_ref[:], 0.0, m0_ref[:])
+            m, _ = jax.lax.fori_loop(0, obs_ref.shape[1], fold,
+                                     (m0v, first_ref[:]))
+            m_out[:] = m
+
+        out = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(m0.shape, jnp.float64),
+            interpret=jax.default_backend() != "tpu",
+        )(jnp.asarray(obs), jnp.asarray(lens), jnp.asarray(m0),
+          jnp.asarray(first), jnp.asarray(ewma))
+        return np.asarray(out)
+    return ewma_fold_sorted(obs, lens, m0, first, ewma)
+
+
+def segmented_min(next_k, starts) -> np.ndarray:
+    """Dispatching boundary scan (numpy reduceat; the fused kernel's scatter
+    half covers the Pallas path and is pinned equal by the kernel test)."""
+    return segmented_min_ref(next_k, starts)

@@ -81,7 +81,14 @@ def _chunk_scan_step(carry, xs, A):
     seg = cum[:, :, None, :] - cum[:, None, :, :]                     # (B,Qi,Qj,H)
     Qn = x_c.shape[1]
     causal = jnp.tril(jnp.ones((Qn, Qn), bool))
-    decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+    mask = causal[None, :, :, None]
+    # mask seg *before* the exp: on the non-causal triangle seg > 0 and
+    # overflows exp to inf once dt·|A| grows past ~88 log-units — the outer
+    # where() discards the inf in the forward pass, but the cotangent of
+    # the pre-mask exp is inf·0 = NaN, which detonates every upstream grad
+    # in a single step.  Kept entries (seg <= 0) are untouched, so the
+    # forward output is bit-identical.
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, seg, 0.0)), 0.0)
     scores = jnp.einsum("bihn,bjhn->bijh", C_c, B_c) * decay          # (B,Qi,Qj,H)
     xbar = x_c * dt_c[..., None]
     y = jnp.einsum("bijh,bjhp->bihp", scores, xbar)

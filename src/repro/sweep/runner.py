@@ -32,10 +32,12 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Sequence
 
+from repro.core import earlycurve as earlycurve_mod
 from repro.core import market as market_mod
 from repro.core import revpred as revpred_mod
 from repro.core import trial as trial_mod
 from repro.core.earlycurve import predict_final_grouped
+from repro.tuner import spottune as spottune_mod
 from repro.core.market import SpotMarket
 from repro.backends import make_backend
 from repro.core.revpred import predict_pool_multi
@@ -54,6 +56,8 @@ def clear_shared_caches() -> None:
     market_mod.clear_trace_caches()
     revpred_mod.clear_prediction_caches()
     trial_mod.clear_sim_caches()
+    earlycurve_mod.clear_fit_caches()
+    spottune_mod.clear_plateau_caches()
 
 
 class SweepRunner:
@@ -108,19 +112,39 @@ class SweepRunner:
         return tuners
 
     # ------------------------------------------------------------ driving
-    def run(self, specs: Sequence[ScenarioSpec]) -> SweepResult:
+    def run(self, specs: Sequence[ScenarioSpec],
+            mode: str = "soa") -> SweepResult:
         """Run all replicas concurrently with cross-replica batching.
 
-        Deploy requests are serviced every round (their RevPred forwards
-        batch across whichever replicas are suspended together); idle
-        curve-fit requests are *parked* until no replica has deploy work
-        left, then flushed as one grouped LM solve — replicas reach idle at
-        different rounds, and flushing late turns many small fit dispatches
-        into a few full ones.  Ordering never leaks between replicas: every
-        request is answered with pure functions of its own replica's
-        state."""
+        ``mode="soa"`` (the default) steps every replica's engine through
+        the structure-of-arrays stepper (``repro.sweep.soa``): lockstep
+        vectorized boundary rounds, bit-identical outcomes, one Python
+        dispatch per *lifecycle event* instead of per generator suspension.
+        Replica grids the stepper does not cover (exact ticks, straggler
+        mode, training backends) fall back to ``mode="batched"``: every
+        ``run_cooperative`` generator advanced round-robin.
+
+        Either way, deploy requests are serviced in cross-replica batches
+        (their RevPred forwards stack into one vmapped call); idle curve-fit
+        requests are *parked* until no replica has deploy work left, then
+        flushed as one grouped LM solve — replicas reach idle at different
+        rounds, and flushing late turns many small fit dispatches into a few
+        full ones.  Ordering never leaks between replicas: every request is
+        answered with pure functions of its own replica's state."""
+        if mode not in ("soa", "batched"):
+            raise ValueError(f"unknown sweep mode {mode!r} "
+                             "(expected 'soa' or 'batched')")
         t0 = time.perf_counter()
         tuners = self.prepare(specs)
+        if mode == "soa":
+            # imported lazily: soa.py reuses this module's _service
+            from repro.sweep.soa import SoaSweep, soa_supported
+            if soa_supported(tuners):
+                SoaSweep(tuners).run()
+                results = [ReplicaResult(spec, t.result, _histories(t))
+                           for spec, t in zip(specs, tuners)]
+                return SweepResult(results, time.perf_counter() - t0,
+                                   mode="soa")
         gens = {i: t.run_cooperative() for i, t in enumerate(tuners)}
         active: Dict[int, object] = {}
         parked: Dict[int, FitRequest] = {}
@@ -160,17 +184,24 @@ class SweepRunner:
             if not isinstance(r, (ProvisionBatch, FitRequest)):
                 r.service_local()      # unknown request kinds degrade safely
         if provs:
-            flat = []
+            flat, stacked = [], []
             for pb in provs:
                 rp = pb.engine.prov.revpred
+                pairs = getattr(rp, "predict_pool_pairs", None)
+                if pairs is not None:       # oracle/zero: direct, no stacking
+                    pb.responses = [pairs(cands, pb.t)
+                                    for _, cands in pb.items]
+                    continue
+                stacked.append(pb)
                 for _, cands in pb.items:
                     flat.append((rp, [inst for inst, _ in cands], pb.t,
                                  [mp for _, mp in cands]))
-            answers = predict_pool_multi(flat)
-            pos = 0
-            for pb in provs:
-                pb.responses = answers[pos:pos + len(pb.items)]
-                pos += len(pb.items)
+            if flat:
+                answers = predict_pool_multi(flat)
+                pos = 0
+                for pb in stacked:
+                    pb.responses = answers[pos:pos + len(pb.items)]
+                    pos += len(pb.items)
         if fits:
             grouped, local = [], []
             for r in fits:

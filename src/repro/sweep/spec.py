@@ -52,6 +52,9 @@ class ScenarioSpec:
     engine_seed: int = 0
     days: float = 12.0
     straggler_factor: float = 0.0
+    # Δt deploy batching: trials turning WAITING within this window deploy
+    # together (0 = every deploy tick stands alone, the legacy behavior)
+    deploy_window_s: float = 0.0
     n_trials: Optional[int] = None       # truncate the suggestion stream
     # search-space shape: "grid" = the workload's finite Table-II space;
     # "continuous" = its continuous_variant relaxation (typed domains,
@@ -230,7 +233,8 @@ def build_replica(spec: ScenarioSpec, market: SpotMarket,
     """Spec + (possibly shared) market/backend/predictor -> runnable Tuner."""
     spec.validate()
     engine = build_engine(market, backend, revpred, seed=spec.engine_seed,
-                          straggler_factor=spec.straggler_factor)
+                          straggler_factor=spec.straggler_factor,
+                          deploy_window_s=spec.deploy_window_s)
     _, searcher_name, initial = resolve_policy(spec)
     return Tuner(engine, build_scheduler(spec),
                  build_searcher(spec, name=searcher_name),

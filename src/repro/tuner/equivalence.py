@@ -141,3 +141,47 @@ def compare_runs(workload: Workload, **kw) -> List[str]:
     fast_eng, fast_res = run_one(workload, exact_ticks=False, **kw)
     exact_eng, exact_res = run_one(workload, exact_ticks=True, **kw)
     return compare_engines(fast_eng, exact_eng, fast_res, exact_res)
+
+
+def compare_sweep_modes(specs) -> List[str]:
+    """Run one ScenarioSpec grid through the SoA stepper and through the
+    generator round-robin path on independently built replica sets (shared
+    caches dropped before each, so neither warms the other) and diff every
+    replica's engine pairwise with ``compare_engines``.  Empty == the SoA
+    fast path is bit-exact."""
+    from repro.sweep import runner as runner_mod
+    from repro.sweep.soa import SoaSweep, soa_supported
+
+    runner = runner_mod.SweepRunner()
+    runner_mod.clear_shared_caches()
+    soa_tuners = runner.prepare(specs)
+    if not soa_supported(soa_tuners):
+        return ["grid not soa_supported — nothing to compare"]
+    SoaSweep(soa_tuners).run()
+
+    runner_mod.clear_shared_caches()
+    gen_res = runner.run(specs, mode="batched")
+
+    out: List[str] = []
+    for spec, ts, rr in zip(specs, soa_tuners, gen_res.replicas):
+        label = (f"{spec.workload}/{spec.scheduler}"
+                 f"/m{spec.market_seed}/e{spec.engine_seed}")
+        if ts.result is None:
+            out.append(f"[{label}] soa replica never finished")
+            continue
+        hist = {s.key: (list(s.metrics_steps), list(s.metrics_vals))
+                for s in ts.engine.views()}
+        if hist != rr.metrics:
+            out.append(f"[{label}] metric histories differ")
+        for field in ("cost", "refunded", "jct", "predicted_rank",
+                      "redeployments", "events"):
+            a, b = getattr(ts.result, field), getattr(rr.result, field)
+            if a != b:
+                out.append(f"[{label}] result.{field}: soa={a!r} gen={b!r}")
+        for field in ("steps_total", "free_steps", "lost_steps",
+                      "ckpt_seconds", "restore_seconds"):
+            if not _close(getattr(ts.result, field), getattr(rr.result, field)):
+                out.append(f"[{label}] result.{field}: "
+                           f"soa={getattr(ts.result, field)!r} "
+                           f"gen={getattr(rr.result, field)!r}")
+    return out

@@ -32,8 +32,61 @@ from repro.core.trial import TrialSpec
 from repro.tuner.events import MetricReported
 from repro.tuner.scheduler import CONTINUE, STOP, Decision, Scheduler
 
+# last-big-delta index per curve prefix, shared process-wide: a trial's
+# metric history (+ any preview extension) is always a prefix of its full
+# deterministic curve — rollbacks truncate to a shorter prefix — so the
+# plateau scan's ``last_big`` accumulator is a pure function of
+# (trial curve, plateau_tol) and every replica of every sweep shares it.
+_PLATEAU_CACHE: Dict[tuple, list] = {}
+_PLATEAU_CACHE_MAX = 16384
+# sorted global grid indices whose prefix passes converged(), per
+# (trial key, tol, window) — derived from _PLATEAU_CACHE, same sharing
+_OK_CACHE: Dict[tuple, list] = {}
+_EMPTY_I64 = np.empty(0, np.int64)
+
+
+def clear_plateau_caches() -> None:
+    _PLATEAU_CACHE.clear()
+    _OK_CACHE.clear()
+
+
+def _last_big(key: tuple, hist, vals, n_total: int) -> np.ndarray:
+    """Global ``last_big`` indices for the curve prefix of length n_total:
+    entry j = the largest delta index i <= j with a relative step >= tol
+    (-1 if none).  Extended incrementally as longer prefixes are seen."""
+    ent = _PLATEAU_CACHE.get(key)
+    if ent is None:
+        if len(_PLATEAU_CACHE) >= _PLATEAU_CACHE_MAX:
+            _PLATEAU_CACHE.clear()
+        ent = _PLATEAU_CACHE[key] = [0, np.empty(0, np.int64)]
+    have = ent[0]
+    if n_total > have:
+        tol = key[-1]
+        n0 = len(hist)
+        lo = max(have - 1, 0)          # previous tail value re-enters diff
+        seq = np.empty(n_total - lo)
+        if lo < n0:
+            seq[:n0 - lo] = hist[lo:n_total] if n_total <= n0 else hist[lo:]
+        if n_total > n0:
+            seq[max(n0 - lo, 0):] = vals[max(lo - n0, 0):n_total - n0]
+        # same float64 expression as EarlyCurve.converged, elementwise
+        rel_big = (np.abs(np.diff(seq))
+                   / np.maximum(np.abs(seq[:-1]), 1e-12)) >= tol
+        idx = np.arange(lo, n_total - 1)
+        prev = ent[1][have - 2] if have >= 2 else -1
+        ext = np.maximum.accumulate(np.where(rel_big, idx, -1))
+        ext = np.maximum(ext, prev)
+        ent[1] = np.concatenate([ent[1][:max(have - 1, 0)], ext])
+        ent[0] = n_total
+    return ent[1]
+
 
 class SpotTuneScheduler(Scheduler):
+    # the preview answer is a pure function of the trial's combined
+    # history+future metric sequence (plus its own stopped flag), so the
+    # engine may memoize it within an allocation epoch
+    preview_stable = True
+
     def __init__(self, theta: float = 0.7, mcnt: int = 3,
                  earlycurve: Optional[EarlyCurve] = None, seed: int = 0):
         self.theta = theta
@@ -79,25 +132,19 @@ class SpotTuneScheduler(Scheduler):
         m = len(vals)
         if n0 + m < W:
             return None
-        # only the trailing W-1 history deltas can sit inside any candidate
-        # plateau window, so the scan is O(W + new points), not O(history)
-        base = max(0, n0 - W)
-        sub = np.empty(n0 - base + m)
-        sub[:n0 - base] = hist[base:]
-        sub[n0 - base:] = vals
-        # same float64 expression as EarlyCurve.converged, elementwise
-        rel_big = (np.abs(np.diff(sub))
-                   / np.maximum(np.abs(sub[:-1]), 1e-12)) >= tol
-        idx = np.arange(base, base + len(rel_big))   # global delta indices
-        last_big = np.maximum.accumulate(np.where(rel_big, idx, -1))
+        # history + preview is always a prefix of the trial's deterministic
+        # curve (rollbacks only truncate to shorter prefixes), so the plateau
+        # accumulator is a pure function of (curve, tol) shared process-wide
+        # across every replica — amortized O(new points) per call.  A delta
+        # before the candidate window has index <= L-W-1 and never violates,
+        # so the global last-big index decides exactly like the windowed scan.
+        last_big = _last_big((view.key, tol), hist, vals, n0 + m)
         ticks = np.asarray(ticks)
         is_last = np.ones(m, bool)
         is_last[:-1] = ticks[1:] != ticks[:-1]
         ends = np.nonzero(is_last)[0]
         L = n0 + ends + 1                    # history length at each tick end
-        # delta (L-2) sits at slice position L-2-base; earlier (unsliced)
-        # deltas have index <= base-1 <= L-W-1 and can never violate
-        ok = (L >= W) & (last_big[L - 2 - base] <= L - W - 1)
+        ok = (L >= W) & (last_big[L - 2] <= L - W - 1)
         hits = np.nonzero(ok)[0]
         if not len(hits):
             return None
@@ -106,6 +153,38 @@ class SpotTuneScheduler(Scheduler):
         while f > 0 and ticks[f - 1] == ticks[f]:
             f -= 1
         return f
+
+    def preview_stop_grid(self, view, vals, lo: int, hi: int):
+        """Sorted global grid indices g (covering at least through ``hi``)
+        where a metric history of length g passes ``converged()``.  The
+        engine combines this with its own point->tick map to find the first
+        acting *tick end* without materializing the trajectory
+        (``_preview_boundary`` fast path); grid index == prefix length
+        because every grid point below ``lo`` is already in the history.
+        None = nothing can fire.  Cached per curve: the index set is a pure
+        function of (curve, tol, window) and only ever extends."""
+        if view.key in self._stopped:
+            return None
+        W = self.ec.plateau_window
+        if W < 2:
+            # converged() is vacuously True from the first point
+            return np.arange(lo, hi + 1, dtype=np.int64)
+        if hi < W:
+            return None
+        tol = self.ec.plateau_tol
+        lb = _last_big((view.key, tol), view.metrics_vals, vals, hi)
+        ent = _OK_CACHE.get((view.key, tol, W))
+        if ent is None:
+            if len(_OK_CACHE) >= _PLATEAU_CACHE_MAX:
+                _OK_CACHE.clear()
+            ent = _OK_CACHE[(view.key, tol, W)] = [W - 1, _EMPTY_I64]
+        if hi > ent[0]:
+            g = np.arange(ent[0] + 1, hi + 1)
+            g = g[lb[g - 2] <= g - W - 1]
+            if len(g):
+                ent[1] = np.concatenate([ent[1], g])
+            ent[0] = hi
+        return ent[1]
 
     def _predict_all(self, views: Sequence) -> Dict[str, float]:
         preds: Dict[str, float] = {}

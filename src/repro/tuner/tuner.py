@@ -123,41 +123,56 @@ class Tuner:
                     # steps run, fidelity) — not just the last metric
                     rich(v)
 
+    def idle_round(self):
+        """One engine-drained idle round, as a generator: may yield a single
+        ``FitRequest`` (service it, then resume); returns True if the round
+        produced new engine work (fresh suggestions admitted or promotions
+        resumed) and False when the run is over.  Factored out of
+        ``run_cooperative`` so batch drivers that step many engines directly
+        (the SoA sweep path) reuse the identical idle policy."""
+        engine, scheduler, searcher = self.engine, self.scheduler, self.searcher
+        views = engine.views()
+        if getattr(searcher, "live_results", False):
+            self._feed_results(views)
+        n = scheduler.request_suggestions(views)
+        if n:
+            added = 0
+            for _ in range(n):
+                spec = searcher.suggest()
+                if spec is None:
+                    break
+                self._admit(spec)
+                added += 1
+            scheduler.suggestions_added(added)
+            if added:
+                return True
+        jobs = scheduler.idle_fit_jobs(views)
+        if jobs:
+            req = FitRequest(scheduler, jobs)
+            yield req
+            assert req.responses is not None, "unserviced FitRequest"
+            scheduler.set_idle_fits(req.responses)
+        promotions = scheduler.on_idle(views)
+        if not promotions:
+            return False
+        engine.resume(promotions)
+        return True
+
+    def finish(self) -> None:
+        """Assemble the RunResult once no more work remains."""
+        self._result = self._assemble()
+
     def run_cooperative(self):
         """Generator form of ``run()``: yields ``ProvisionBatch`` (engine
         deploy points) and ``FitRequest`` (idle curve fits); each must be
         serviced before resuming.  The finished ``RunResult`` lands in
         ``self.result`` when the generator is exhausted."""
-        engine, scheduler, searcher = self.engine, self.scheduler, self.searcher
-        live = getattr(searcher, "live_results", False)
         while True:
-            yield from engine.run_cooperative()
-            views = engine.views()
-            if live:
-                self._feed_results(views)
-            n = scheduler.request_suggestions(views)
-            if n:
-                added = 0
-                for _ in range(n):
-                    spec = searcher.suggest()
-                    if spec is None:
-                        break
-                    self._admit(spec)
-                    added += 1
-                scheduler.suggestions_added(added)
-                if added:
-                    continue
-            jobs = scheduler.idle_fit_jobs(views)
-            if jobs:
-                req = FitRequest(scheduler, jobs)
-                yield req
-                assert req.responses is not None, "unserviced FitRequest"
-                scheduler.set_idle_fits(req.responses)
-            promotions = scheduler.on_idle(views)
-            if not promotions:
+            yield from self.engine.run_cooperative()
+            more = yield from self.idle_round()
+            if not more:
                 break
-            engine.resume(promotions)
-        self._result = self._assemble()
+        self.finish()
 
     @property
     def result(self) -> Optional[RunResult]:

@@ -87,3 +87,148 @@ def test_ops_dispatch_cpu_uses_ref(rng):
     # force=interpret exercises the Pallas body on CPU
     h3, c3 = ops.lstm_cell(x, h, c, wih, whh, b, force="interpret")
     np.testing.assert_allclose(np.asarray(h3), np.asarray(h2), rtol=1e-5, atol=1e-5)
+
+
+# =================================================== SoA inner-step kernels
+# Three layers, each bit-exact to the one below (repro.kernels.soa_step):
+#
+#     soa_step_fused (pallas, one dispatch)
+#         == ewma_fold_sorted / segmented_min_ref   (numpy, the default)
+#         == ewma_fold_ref                          (columnwise masked fold)
+#         == PerfModel.update_many called per row   (production semantics)
+#
+# The Pallas check runs in a subprocess with JAX_ENABLE_X64=1: the fold is
+# float64 and the repo never flips x64 process-wide (the training backends
+# are float32), so an in-process check would silently downcast.
+
+import os
+import subprocess
+import sys
+import types
+
+from repro.core.provisioner import PerfModel
+from repro.kernels.soa_step import (ewma_fold_ref, ewma_fold_sorted,
+                                    segmented_min_ref)
+
+_BIG = np.int64(1) << np.int64(60)
+
+
+def _ragged(nprng, rows, width):
+    """Random padded (obs, lens, m0, first, ewma) batch; the padding tail
+    carries garbage on purpose — folds must never read past lens."""
+    lens = nprng.integers(0, width + 1, rows)
+    obs = nprng.uniform(0.5, 12.0, (rows, width))
+    m0 = nprng.uniform(0.5, 12.0, rows)
+    first = nprng.random(rows) < 0.4
+    ewma = np.full(rows, 0.5)
+    return obs, lens, m0, first, ewma
+
+
+def _sequential_update_many(obs, lens, m0, first, ewma):
+    """Fold each row through the real PerfModel.update_many — the op
+    sequence every kernel must replay."""
+    out = np.empty_like(m0)
+    inst = types.SimpleNamespace(name="i0")
+    trial = types.SimpleNamespace(key="t0")
+    for i in range(len(lens)):
+        pm = PerfModel(pool=[], ewma=float(ewma[i]))
+        if not first[i]:
+            pm._m[("i0", "t0")] = float(m0[i])
+            pm._observed[("i0", "t0")] = True
+        pm.update_many(inst, trial, obs[i, :lens[i]])
+        if lens[i] == 0 and first[i]:
+            out[i] = 0.0          # kernel convention for never-observed rows
+        else:
+            out[i] = pm._m.get(("i0", "t0"), float(m0[i]))
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("rows,width", [(1, 1), (7, 5), (64, 40), (129, 3)])
+def test_ewma_fold_ref_matches_sequential_update_many(seed, rows, width):
+    nprng = np.random.default_rng(seed)
+    batch = _ragged(nprng, rows, width)
+    assert np.array_equal(ewma_fold_ref(*batch),
+                          _sequential_update_many(*batch))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ewma_fold_sorted_matches_ref(seed):
+    nprng = np.random.default_rng(100 + seed)
+    rows = int(nprng.integers(1, 200))
+    width = int(nprng.integers(1, 60))
+    batch = _ragged(nprng, rows, width)
+    assert np.array_equal(ewma_fold_sorted(*batch), ewma_fold_ref(*batch))
+
+
+def test_ewma_fold_sorted_skewed_lengths():
+    """The skew the sorted fold exists for: one long row among stubs."""
+    nprng = np.random.default_rng(7)
+    obs, lens, m0, first, ewma = _ragged(nprng, 50, 400)
+    lens[:] = nprng.integers(0, 3, 50)
+    lens[17] = 400
+    batch = (obs, lens, m0, first, ewma)
+    assert np.array_equal(ewma_fold_sorted(*batch), ewma_fold_ref(*batch))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_segmented_min_matches_python(seed):
+    nprng = np.random.default_rng(300 + seed)
+    n_seg = int(nprng.integers(1, 20))
+    sizes = nprng.integers(1, 9, n_seg)
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    next_k = nprng.integers(0, 1_000_000, int(sizes.sum())).astype(np.int64)
+    next_k[nprng.random(len(next_k)) < 0.3] = _BIG    # not-running padding
+    got = segmented_min_ref(next_k, starts)
+    bounds = list(starts) + [len(next_k)]
+    want = np.array([next_k[a:b].min() for a, b in zip(bounds, bounds[1:])])
+    assert np.array_equal(got, want)
+
+
+_PALLAS_SCRIPT = r"""
+import importlib.util
+import numpy as np
+if importlib.util.find_spec("jax") is None or \
+        importlib.util.find_spec("jax.experimental.pallas") is None:
+    print("SKIP: pallas unavailable")
+    raise SystemExit(0)
+import os
+os.environ["REPRO_SOA_PALLAS"] = "1"
+from repro.kernels.soa_step import (ewma_fold, ewma_fold_ref,
+                                    segmented_min_ref, soa_step_fused)
+_BIG = np.int64(1) << np.int64(60)
+rng = np.random.default_rng(42)
+rows, width = 37, 23
+lens = rng.integers(0, width + 1, rows)
+obs = rng.uniform(0.5, 12.0, (rows, width))
+m0 = rng.uniform(0.5, 12.0, rows)
+first = rng.random(rows) < 0.4
+ewma = np.full(rows, 0.5)
+row_rep = np.sort(rng.integers(0, 5, rows)).astype(np.int64)
+next_k = rng.integers(0, 1_000_000, rows).astype(np.int64)
+next_k[rng.random(rows) < 0.3] = _BIG
+m_ref = ewma_fold_ref(obs, lens, m0, first, ewma)
+starts = np.searchsorted(row_rep, np.arange(5)).astype(np.int64)
+seg_ref = segmented_min_ref(next_k, starts)
+m, seg = soa_step_fused(obs, lens, m0, first, ewma, next_k, row_rep, 5)
+assert np.array_equal(m, m_ref), (m - m_ref)
+assert np.array_equal(seg, seg_ref), (seg, seg_ref)
+m2 = ewma_fold(obs, lens, m0, first, ewma)   # dispatch honors the env flag
+assert np.array_equal(m2, m_ref), (m2 - m_ref)
+print("OK")
+"""
+
+
+def test_soa_step_fused_pallas_interpret_matches_refs():
+    """The fused pallas_call (interpret mode on CPU) == both numpy refs."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, JAX_ENABLE_X64="1")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", _PALLAS_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=300)
+    if "SKIP" in proc.stdout:
+        pytest.skip("pallas unavailable in this environment")
+    assert proc.returncode == 0 and "OK" in proc.stdout, \
+        proc.stdout + proc.stderr

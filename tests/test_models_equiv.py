@@ -89,6 +89,37 @@ def test_ssd_chunk_padding_exact(rng):
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
 
 
+def test_ssd_chunk_grads_finite_under_large_decay(rng):
+    """Regression: with dt·|A| summing past fp32 exp range (~88 log-units)
+    the masked intra-chunk decay used to overflow to inf on the non-causal
+    triangle — discarded in the forward pass but turned into an inf·0 = NaN
+    cotangent in the backward, NaN-ing every upstream gradient in one step
+    (how the reduced mamba2 preset died on data seed 0)."""
+    Bb, S, H, P, N = 1, 32, 2, 4, 3
+    x = jnp.asarray(rng.standard_normal((Bb, S, H, P)), f32)
+    # large step sizes: cumulative log-decay over a chunk ~ 32·4·1.5 >> 88
+    dt = jnp.asarray(rng.uniform(2.0, 4.0, (Bb, S, H)), f32)
+    Am = -jnp.asarray(rng.uniform(1.0, 1.5, (H,)), f32)
+    Bi = jnp.asarray(rng.standard_normal((Bb, S, H, N)), f32)
+    Ci = jnp.asarray(rng.standard_normal((Bb, S, H, N)), f32)
+
+    def loss(dt_, A_):
+        y, s = ssd.ssd_chunked(x, dt_, A_, Bi, Ci, chunk=16)
+        return jnp.sum(y**2) + jnp.sum(s**2)
+
+    val, (g_dt, g_A) = jax.value_and_grad(loss, argnums=(0, 1))(dt, Am)
+    assert np.isfinite(float(val))
+    assert np.isfinite(np.asarray(g_dt)).all()
+    assert np.isfinite(np.asarray(g_A)).all()
+    # same inputs still agree with the sequential reference in the forward
+    y1, s1 = ssd.ssd_ref(x, dt, Am, Bi, Ci)
+    y2, s2 = ssd.ssd_chunked(x, dt, Am, Bi, Ci, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_mla_train_equals_absorbed(rng):
     cfg = dataclasses.replace(get_config("deepseek-v2-236b", reduced=True),
                               dtype="float32")

@@ -189,3 +189,71 @@ def test_fast_equals_exact_property(market_seed, engine_seed):
     diffs = compare_runs(LOR, market_seed=market_seed, seed=engine_seed,
                          days=6.0, n_trials=6)
     assert not diffs, "\n".join(diffs)
+
+
+# ------------------------------------------------- SoA sweep vs per-replica
+# The structure-of-arrays stepper (repro.sweep.soa) must be bit-exact
+# against the per-replica generator path — billing, refunds, metric
+# histories, redeployments, and the full event log (compare_sweep_modes
+# diffs every replica pairwise with compare_engines' contract).
+
+SWEEP_POLICIES = ("spottune", "asha", "hyperband", "pbt", "adaptive")
+SWEEP_SEEDS = (1, 3, 7, 11, 23)
+
+
+@pytest.mark.parametrize("policy", SWEEP_POLICIES)
+def test_soa_equals_per_replica_policy_grid(policy):
+    """Per policy, a 4-workload x 5-market-seed grid (20 replicas) through
+    the SoA stepper and the generator round-robin path — together the five
+    parametrizations cover the full 5x4x5 policy/workload/seed cube."""
+    from repro.sweep import scenario_grid
+    from repro.tuner.equivalence import compare_sweep_modes
+
+    names = [w.name for w in WORKLOADS[:4]]
+    specs = scenario_grid(names, SWEEP_SEEDS, revpred="oracle", theta=0.7,
+                          days=8.0, scheduler=policy)
+    diffs = compare_sweep_modes(specs)
+    assert not diffs, "\n".join(diffs[:12])
+
+
+# ------------------------------------------------------ Δt deploy batching
+
+@pytest.mark.parametrize("window", [60.0, 600.0])
+def test_soa_equals_per_replica_deploy_window(window):
+    """Δt > 0 gates deploys into shared flush ticks — a different event
+    schedule, but one the SoA stepper must still replay bit-exactly."""
+    from repro.sweep import scenario_grid
+    from repro.tuner.equivalence import compare_sweep_modes
+
+    specs = scenario_grid(["LoR", "SVM"], [3, 11], revpred="oracle",
+                          theta=0.7, days=8.0, deploy_window_s=window)
+    diffs = compare_sweep_modes(specs)
+    assert not diffs, "\n".join(diffs[:12])
+
+
+def test_deploy_window_zero_matches_legacy():
+    """Δt = 0 must be invariant: a grid with the window set to zero
+    explicitly produces the byte-identical outcome of the same grid with
+    the field left at its default (the pre-window engine behavior)."""
+    from repro.sweep import SweepRunner, clear_shared_caches, scenario_grid
+
+    base = scenario_grid(["LoR", "SVM"], [3, 11], revpred="oracle",
+                         theta=0.7, days=8.0)
+    gated = scenario_grid(["LoR", "SVM"], [3, 11], revpred="oracle",
+                          theta=0.7, days=8.0, deploy_window_s=0.0)
+    clear_shared_caches()
+    res_a = SweepRunner().run(base)
+    clear_shared_caches()
+    res_b = SweepRunner().run(gated)
+    for ra, rb in zip(res_a.replicas, res_b.replicas):
+        assert ra.result == rb.result
+        assert ra.metrics == rb.metrics
+
+
+@pytest.mark.parametrize("window", [60.0, 600.0])
+def test_fast_equals_exact_deploy_window(window):
+    """Engine-level Δt: the boundary-jumping path must arm/flush the same
+    deploy-window ticks the exact SLEEP loop visits."""
+    diffs = compare_runs(LOR, days=8.0, n_trials=6, deploy_window_s=window,
+                         revpred_factory=lambda m: OracleRevPred(m))
+    assert not diffs, "\n".join(diffs)

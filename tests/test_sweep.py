@@ -248,6 +248,6 @@ def test_sweep_result_grouping_and_export(tmp_path):
     res.to_csv(str(cpath))
     import json
     blob = json.loads(jpath.read_text())
-    assert blob["mode"] == "batched" and len(blob["replicas"]) == 2
+    assert blob["mode"] == "soa" and len(blob["replicas"]) == 2
     assert "cost" in blob["replicas"][0]
     assert cpath.read_text().count("\n") >= 3
