@@ -15,6 +15,23 @@ Perf-trajectory tooling (docs/perf.md):
   --sweep         benchmark the batched multi-replica sweep runtime
                   (repro.sweep) against the naive sequential loop on
                   fig9-style grids; records replicas/sec + speedups
+  --append-history
+                  append one ``{pr, suite, replicas_per_s, total_speedup}``
+                  record per sweep grid to the JSON record's ``trajectory``
+                  list (requires --sweep and --json) — the cross-PR perf
+                  trail CI's regression smoke reads
+  --pr N          PR number stamped on trajectory records (default: the
+                  CHANGES.md entry count, one line per landed PR)
+
+JSON row schema: every per-suite row is ``{"name", "value", "unit"}`` —
+``value`` is a typed number, never a stringified float.  Timing rows carry
+microseconds per call (unit ``"us_per_call"``); derived-metric rows carry
+the metric itself with the unit inferred from the row-name suffix
+(``_cost_usd`` → ``"usd"``, ``_jct_s``/``_wall_s`` → ``"s"``, ``_pcr`` →
+``"ratio"``, ...); rows whose derived value is non-numeric keep it under
+``"note"`` with ``value: null``.  ``read_rows`` is the reader shim: it
+also yields rows from pre-PR-8 records (``[name, us, "derived"]``
+triples) — kept for one release, then triples stop being read.
 """
 
 from __future__ import annotations
@@ -34,6 +51,55 @@ SIM_BOUND = ("fig7", "fig8", "fig9", "asha")
 
 def _derived_map(rows):
     return {name: derived for name, _, derived in rows}
+
+
+# row-name suffix -> unit for derived-metric rows (docstring schema)
+_UNIT_BY_SUFFIX = (
+    ("_cost_usd", "usd"), ("_usd", "usd"),
+    ("_jct_s", "s"), ("_wall_s", "s"), ("_wall", "us"), ("_s", "s"),
+    ("_pcr", "ratio"), ("_ratio", "ratio"), ("_err_mean", "ratio"),
+    ("_pct", "percent"),
+    ("_per_sec", "1/s"),
+    ("_speedup", "x"), ("_speedup_vs_exact", "x"),
+    ("_gbps", "GB/s"), ("_gflops", "GFLOP/s"),
+)
+
+
+def _typed_row(name, us, derived) -> dict:
+    """One ``{name, value, unit}`` record (see module docstring)."""
+    if us:
+        row = {"name": name, "value": round(float(us), 3),
+               "unit": "us_per_call"}
+        if derived not in (None, ""):
+            row["note"] = str(derived)
+        return row
+    try:
+        value = float(derived)
+    except (TypeError, ValueError):
+        return {"name": name, "value": None, "unit": "text",
+                "note": str(derived)}
+    unit = "scalar"
+    for suffix, u in _UNIT_BY_SUFFIX:
+        if name.endswith(suffix):
+            unit = u
+            break
+    return {"name": name, "value": value, "unit": unit}
+
+
+def read_rows(record):
+    """Yield ``(name, value, unit)`` from a BENCH record's flat ``rows``.
+
+    Reader shim: pre-PR-8 records stored ``[name, us, "derived"]`` triples
+    (stringified numbers, dead 0.0 middle field); those are converted on
+    the fly through ``_typed_row`` so consumers only ever see the typed
+    schema.  The triple branch is kept for one release."""
+    for row in record.get("rows", []):
+        if isinstance(row, dict):
+            yield row["name"], row["value"], row["unit"]
+        else:                               # legacy triple
+            name, us, derived = row
+            t = _typed_row(name, us, derived)
+            yield t["name"], t["value"], t["unit"]
 
 
 def run_sweep_bench(quick: bool) -> dict:
@@ -137,17 +203,23 @@ def _merge_record(prev, new: dict) -> dict:
     fig9`` or ``--sweep`` alone) refreshes only the suites it actually ran
     instead of clobbering the whole file.  Top-level scalars (quick,
     exact_ticks, speedup_total) describe the *latest* invocation; the flat
-    ``rows`` list is rebuilt from the merged per-suite rows by the caller.
+    ``rows`` list is rebuilt from the merged per-suite rows by the caller;
+    the ``trajectory`` list always survives (append-only cross-PR trail).
     A record from a different bench (or a pre-merge-format file with no
-    per-suite rows) is replaced wholesale."""
+    per-suite rows) is replaced wholesale.  Legacy per-suite row triples
+    from an old file are upgraded to the typed schema on merge so a
+    partial refresh never leaves a mixed-format record."""
     if not (isinstance(prev, dict) and prev.get("bench") == new.get("bench")):
         return new
     prev_suites = prev.get("suites", {})
     if prev_suites and not any("rows" in s for s in prev_suites.values()):
         return new      # pre-merge-format record: rows not attributable
+    for s in prev_suites.values():
+        s["rows"] = [r if isinstance(r, dict) else _typed_row(*r)
+                     for r in s.get("rows", [])]
     out = {k: v for k, v in prev.items() if k != "rows"}
     out.update({k: v for k, v in new.items() if k not in ("suites", "sweep")})
-    out["suites"] = {**prev.get("suites", {}), **new.get("suites", {})}
+    out["suites"] = {**prev_suites, **new.get("suites", {})}
     sweep = {**(prev.get("sweep") or {}), **(new.get("sweep") or {})}
     if sweep:
         out["sweep"] = sweep
@@ -159,7 +231,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,fig12,"
-                         "asha,roofline,train")
+                         "asha,roofline,train,soa_kernel")
     ap.add_argument("--json", nargs="?", const="BENCH_simcore.json",
                     default=None, metavar="PATH",
                     help="write a JSON benchmark record (default "
@@ -172,6 +244,13 @@ def main() -> None:
     ap.add_argument("--sweep", action="store_true",
                     help="benchmark the batched sweep runtime vs the naive "
                          "replica loop (records replicas/sec)")
+    ap.add_argument("--append-history", action="store_true",
+                    help="append {pr, suite, replicas_per_s, total_speedup} "
+                         "trajectory records for this run's sweep grids to "
+                         "the --json record")
+    ap.add_argument("--pr", type=int, default=None,
+                    help="PR number for --append-history records (default: "
+                         "the CHANGES.md entry count)")
     args = ap.parse_args()
 
     if args.exact:
@@ -185,7 +264,7 @@ def main() -> None:
     from benchmarks import (asha_compare, fig6_profiling, fig7_cost_perf,
                             fig8_theta, fig9_refund, fig10_revpred,
                             fig11_earlycurve, fig12_checkpoint,
-                            roofline_report, training_trials)
+                            roofline_report, soa_kernel, training_trials)
     from repro.core.trial import WORKLOADS
 
     quick_w = WORKLOADS[:2]
@@ -206,6 +285,7 @@ def main() -> None:
         "asha": lambda: asha_compare.run(
             workloads=quick_w[:1] if args.quick else None),
         "roofline": lambda: roofline_report.run(),
+        "soa_kernel": lambda: soa_kernel.run(quick=args.quick),
         "train": lambda: training_trials.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(suite)
@@ -231,7 +311,7 @@ def main() -> None:
         print(f"{name}_wall,{wall * 1e6:.1f},ok", flush=True)
         record["suites"][name] = {
             "wall_s": round(wall, 3), "quick": args.quick,
-            "rows": [[rname, us, str(derived)]
+            "rows": [_typed_row(rname, us, derived)
                      for rname, us, derived in rows]}
 
         if args.speedup and name in SIM_BOUND and not args.exact:
@@ -295,12 +375,34 @@ def main() -> None:
                   f"fast_s={fast:.2f}|exact_s={exact:.2f}", flush=True)
 
     if args.json:
+        # trajectory records only for grids measured by THIS invocation —
+        # the merge below folds in older grids that must not re-append
+        ran_sweep = dict(record.get("sweep") or {})
         if os.path.exists(args.json):
             try:
                 with open(args.json) as fh:
                     record = _merge_record(json.load(fh), record)
             except (OSError, ValueError):
                 pass        # unreadable existing file: replace it
+        if args.append_history and ran_sweep:
+            pr = args.pr
+            if pr is None:
+                try:
+                    with open(os.path.join(os.path.dirname(__file__), "..",
+                                           "CHANGES.md")) as fh:
+                        pr = sum(1 for ln in fh if ln.strip())
+                except OSError:
+                    pr = 0
+            traj = record.setdefault("trajectory", [])
+            for suite, rec in sorted(ran_sweep.items()):
+                # total_speedup: SoA vs the coldest baseline this grid ran
+                # (naive cold loop where measured, else the generator path)
+                traj.append({
+                    "pr": pr, "suite": suite,
+                    "replicas_per_s": rec["replicas_per_sec"],
+                    "total_speedup": rec.get("speedup_vs_naive_cold",
+                                             rec.get("speedup_vs_batched")),
+                })
         # flat view over the merged per-suite rows, for grep-style consumers
         record["rows"] = [r for s in record["suites"].values()
                           for r in s.get("rows", [])]

@@ -1,0 +1,130 @@
+"""Fused SoA inner-step kernel bench (``repro.kernels.soa_step``).
+
+Times the two halves of the SoA round's per-tick compute — the batched
+EWMA fold and the segmented boundary min — as (a) the default numpy
+reference pair and (b) the single fused ``pallas_call``
+(``soa_step_fused``).  On TPU the fused kernel compiles natively and the
+row is a real device measurement; elsewhere it runs in interpreter mode,
+where the number is a correctness-path latency (useful for tracking the
+dispatch overhead the sweep's deferred-fold path pays per round, not a
+speed claim).  The backend lands in its own row so readers can tell the
+two apart, and the fused outputs are checked bit-exact against the
+references on every run.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.kernels.soa_step import _BIG, ewma_fold_sorted, segmented_min_ref
+
+
+def _shapes(quick: bool):
+    # fold rows x padded obs, scan rows, segments — sized after one round
+    # of the fig9 grids (quick: the 4-replica CI grid; full: a 1000-replica
+    # round where ~1/8 of rows are touched and segments hold ~32 rows)
+    return (32, 8, 128, 8) if quick else (128, 16, 512, 16)
+
+
+def _inputs(quick: bool):
+    F, L, N, R = _shapes(quick)
+    rng = np.random.default_rng(8)
+    obs = rng.uniform(0.5, 2.0, size=(F, L))
+    lens = rng.integers(1, L + 1, size=F).astype(np.int64)
+    m0 = rng.uniform(0.5, 2.0, size=F)
+    first = rng.random(F) < 0.3
+    # the PerfModel default (0.5): dyadic, so both fold products are exact
+    # and XLA's FMA contraction cannot perturb the result — the same
+    # property the sweep's bit-exactness relies on (see soa_step docstring)
+    ewma = np.full(F, 0.5)
+    next_k = rng.integers(0, 10_000, size=N).astype(np.int64)
+    next_k[rng.random(N) < 0.2] = _BIG          # not-running padding rows
+    row_rep = np.sort(rng.integers(0, R, size=N)).astype(np.int64)
+    row_rep[:R] = np.arange(R)                  # every segment non-empty
+    row_rep = np.sort(row_rep)
+    starts = np.searchsorted(row_rep, np.arange(R)).astype(np.int64)
+    return obs, lens, m0, first, ewma, next_k, row_rep, R, starts
+
+
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _fused_main(quick: bool) -> None:
+    """Subprocess entry: time ``soa_step_fused`` under JAX_ENABLE_X64.
+
+    The fold carries float64 (bit-exactness vs the sequential replay is
+    the whole contract), so the kernel needs x64 enabled — which the bench
+    parent can't flip process-wide without perturbing the f32 training
+    suites.  Same isolation the kernel CI tests use."""
+    import jax
+
+    from repro.kernels.soa_step import soa_step_fused
+
+    obs, lens, m0, first, ewma, next_k, row_rep, R, starts = _inputs(quick)
+    reps = 3 if quick else 5
+    m_ref = ewma_fold_sorted(obs, lens, m0, first, ewma)
+    seg_ref = segmented_min_ref(next_k, starts)
+    # warm-up builds the pallas_call (and compiles it on TPU)
+    m, seg = soa_step_fused(obs, lens, m0, first, ewma, next_k, row_rep, R)
+    fused_us = _best_of(lambda: soa_step_fused(obs, lens, m0, first, ewma,
+                                               next_k, row_rep, R), reps)
+    backend = jax.default_backend()
+    print(json.dumps({
+        "us": fused_us,
+        "backend": backend if backend == "tpu" else f"{backend}-interpret",
+        "exact": bool(np.array_equal(m, m_ref)
+                      and np.array_equal(seg, seg_ref)),
+    }))
+
+
+def run(quick: bool = False) -> list:
+    obs, lens, m0, first, ewma, next_k, row_rep, R, starts = _inputs(quick)
+    reps = 3 if quick else 5
+    rows = []
+
+    m_ref = ewma_fold_sorted(obs, lens, m0, first, ewma)
+    seg_ref = segmented_min_ref(next_k, starts)
+    np_us = _best_of(lambda: (ewma_fold_sorted(obs, lens, m0, first, ewma),
+                              segmented_min_ref(next_k, starts)), reps)
+    rows.append(("soa_step_numpy_pair", np_us, round(float(m_ref.sum()), 6)))
+
+    env = dict(os.environ, JAX_ENABLE_X64="1",
+               PYTHONPATH=os.pathsep.join(
+                   p for p in ("src", os.environ.get("PYTHONPATH", ""))
+                   if p))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.soa_kernel", "--fused"]
+        + (["--quick"] if quick else []),
+        capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        rows.append(("soa_step_fused", 0.0,
+                     f"skip:{(proc.stderr or 'subprocess').strip()[-60:]}"))
+        return rows
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    rows.append(("soa_step_fused", res["us"],
+                 "bitexact" if res["exact"] else "MISMATCH"))
+    rows.append(("soa_step_fused_backend", 0.0, res["backend"]))
+    if not res["exact"]:
+        raise AssertionError(
+            "soa_step_fused diverged from the numpy references")
+    return rows
+
+
+if __name__ == "__main__":
+    if "--fused" in sys.argv:
+        _fused_main("--quick" in sys.argv)
+    else:
+        for r in run("--quick" in sys.argv):
+            print(*r, sep=",")

@@ -364,6 +364,17 @@ def main(argv=None) -> None:
         print(f"# decompose done at {time.perf_counter()-t0:.1f}s",
               file=sys.stderr)
     sections.append(f"_Generated in {time.perf_counter()-t0:.0f}s wall._")
+    # Sections below the marker are owned by other benchmarks (e.g. the
+    # real-training-trials tables from benchmarks/training_trials.py);
+    # carry them over verbatim so regeneration doesn't clobber them.
+    marker = "<!-- sections below this marker"
+    try:
+        with open(args.out) as fh:
+            old = fh.read()
+        if marker in old:
+            sections.append("\n" + old[old.index(marker):].rstrip())
+    except OSError:
+        pass
     with open(args.out, "w") as fh:
         fh.write("\n".join(sections) + "\n")
     print(f"# wrote {args.out}", file=sys.stderr)

@@ -79,7 +79,9 @@ def _fit_lm_raw(k, y, alpha0, iters: int = 60):
         J = jac_fn(alpha)                                 # (N, 4)
         JTJ = J.T @ J
         g = J.T @ r
-        step = jnp.linalg.solve(JTJ + lam * jnp.eye(4), g)
+        # dtype pinned to the carry: under JAX_ENABLE_X64 the default eye
+        # would be f64 and silently promote the whole solve
+        step = jnp.linalg.solve(JTJ + lam * jnp.eye(4, dtype=JTJ.dtype), g)
         cand = alpha - step
         c_new, c_old = cost(cand), cost(alpha)
         improved = c_new < c_old
@@ -91,7 +93,7 @@ def _fit_lm_raw(k, y, alpha0, iters: int = 60):
         best_c = jnp.minimum(c_cur, best_c)
         return (alpha, lam, best_a, best_c), None
 
-    init = (alpha0, jnp.asarray(1e-2), alpha0, cost(alpha0))
+    init = (alpha0, jnp.asarray(1e-2, alpha0.dtype), alpha0, cost(alpha0))
     (alpha, _, best_a, best_c), _ = jax.lax.scan(body, init, None, length=iters)
     return best_a, best_c
 
@@ -123,7 +125,8 @@ def _fit_lm_masked_raw(k, y, mask, n_real, alpha0):
         J = jac_fn(alpha)
         JTJ = J.T @ J
         g = J.T @ r
-        step = jnp.linalg.solve(JTJ + lam * jnp.eye(4), g)
+        # dtype pinned to the carry (see _fit_lm_raw)
+        step = jnp.linalg.solve(JTJ + lam * jnp.eye(4, dtype=JTJ.dtype), g)
         cand = alpha - step
         c_new, c_old = cost(cand), cost(alpha)
         improved = c_new < c_old
@@ -135,7 +138,7 @@ def _fit_lm_masked_raw(k, y, mask, n_real, alpha0):
         best_c = jnp.minimum(c_cur, best_c)
         return (alpha, lam, best_a, best_c), None
 
-    init = (alpha0, jnp.asarray(1e-2), alpha0, cost(alpha0))
+    init = (alpha0, jnp.asarray(1e-2, alpha0.dtype), alpha0, cost(alpha0))
     (alpha, _, best_a, best_c), _ = jax.lax.scan(body, init, None, length=60)
     return best_a, best_c
 

@@ -413,7 +413,16 @@ class SpotMarket:
         minute = int(t / MINUTE)
         ent = self._pool_avg_memo
         if ent is None or ent[0] != minute:
-            avgs = {i.name: self.avg_price(i, t) for i in self.pool}
+            # inlined avg_price (identical arithmetic): the per-call memo
+            # key build + lookup dominates at one fresh minute per deploy
+            win = int(HOUR / MINUTE)
+            avgs = {}
+            for i in self.pool:
+                tr = self.traces[i.name]
+                hi = min(minute, len(tr) - 1) + 1
+                lo = max(0, hi - win)
+                P = self._price_prefix(i.name)
+                avgs[i.name] = (P[hi] - P[lo]) / (hi - lo)
             ent = self._pool_avg_memo = (minute, avgs)
         return ent[1]
 

@@ -110,6 +110,9 @@ class Provisioner:
         self._names = [i.name for i in market.pool]
         self._priors = [perf.c0 / i.chips ** perf.prior_exp
                         for i in market.pool]
+        # array mirrors for the cross-replica vectorized solve (same doubles)
+        self._scales_arr = np.asarray(self._scales)
+        self._priors_arr = np.asarray(self._priors)
         # block-buffered delta draws: Generator.uniform fills element-wise
         # from the bit stream, so dispensing n values from a pre-drawn block
         # yields the exact doubles n direct uniform(lo, hi, n) calls would
@@ -117,6 +120,13 @@ class Provisioner:
         self._upos = 0
 
     def _deltas(self, n: int) -> list:
+        return self._deltas_arr(n).tolist()
+
+    def _deltas_arr(self, n: int) -> np.ndarray:
+        """Dispense ``n`` draws from the block buffer as a float64 view —
+        the same doubles ``_deltas`` hands out as a list (Generator.uniform
+        fills element-wise from the bit stream, so consecutive dispenses of
+        n1 then n2 values equal one dispense of n1+n2)."""
         pos = self._upos
         buf = self._ubuf
         end = pos + n
@@ -127,7 +137,7 @@ class Provisioner:
             self._ubuf = buf
             pos, end = 0, n
         self._upos = end
-        return buf[pos:end].tolist()
+        return buf[pos:end]
 
     def candidates(self, t: float, trial: TrialSpec,
                    exclude: Optional[set] = None) -> list:
@@ -249,6 +259,138 @@ class Provisioner:
         when the predictor supports it."""
         cands = self.candidates(t, trial, exclude)
         return self.choose(t, trial, cands, self.predict_candidates(t, cands))
+
+
+def best_fused_multi(jobs: list) -> list:
+    """One vectorized Eq.-2 solve over many deploys — possibly spanning many
+    replicas' provisioners — in engine order.
+
+    ``jobs`` is ``[(prov, t, trial_spec), ...]``; the return is the aligned
+    ``Choice`` list, bit-identical (floats and RNG consumption) to calling
+    ``prov.best_fused(t, spec)`` per job in order:
+
+      * each job's bid deltas are dispensed from its provisioner's block
+        buffer in job order — per provisioner that is the exact scalar draw
+        sequence, and streams never cross provisioners;
+      * the Eq.-2 expression keeps the scalar associativity elementwise
+        (``m * (1.0 - p) * avg / HOUR``), and the lexicographic
+        ``(s_cost, m*avg)`` argmin resolves full ties to the first pool
+        index, like the scalar strict-``<`` scan;
+      * oracle labels are the same strict ``fm > max_price`` comparison;
+        minutes past a pool member's trace fall back to the scalar
+        ``rp.predict`` path per element.
+
+    Only valid for ``fused_supported()`` provisioners and jobs without
+    exclusions (callers route excluded trials through ``best_fused``).
+    Mixed pool sizes drop to the scalar loop — equally exact, just unfused.
+    """
+    n = len(jobs)
+    if n < 4:
+        return [prov.best_fused(t, spec) for prov, t, spec in jobs]
+    ctxs: dict = {}          # (id(prov), minute) -> per-pool context arrays
+    ctx_list: list = []
+    ctx_of = np.empty(n, np.int64)
+    drows: list = []
+    for j, (prov, t, spec) in enumerate(jobs):
+        minute, prices, avgs = prov.market.pool_price_rows(t)
+        key = (id(prov), minute)
+        ctx = ctxs.get(key)
+        if ctx is None:
+            rp = prov.revpred
+            const_p = getattr(rp, "CONST_P", None)
+            if const_p is None:
+                fm_minute = getattr(rp, "pool_fm_minute", None)
+                if fm_minute is not None:
+                    fmv = fm_minute(minute)
+                else:
+                    fmv = np.array([fml[minute] if minute < L else np.nan
+                                    for fml, L in rp.pool_fm_rows()])
+            else:
+                fmv = np.full(len(prices), np.nan)
+            ctx = ctxs[key] = (len(ctx_list), np.asarray(prices),
+                               np.asarray(avgs), prov._scales_arr,
+                               prov._priors, fmv,
+                               np.nan if const_p is None else const_p,
+                               prov.market.pool, prov._names)
+            ctx_list.append(ctx)
+        ctx_of[j] = ctx[0]
+        drows.append(prov._deltas_arr(len(ctx[1])))
+    if len({len(c[1]) for c in ctx_list}) != 1:
+        # ragged pools cannot stack; the deltas are already consumed in the
+        # scalar per-job order, so the scalar finish stays bit-exact
+        return _solve_rows_scalar(jobs, ctx_list, ctx_of, drows)
+    ci = ctx_of
+    PRICES = np.stack([c[1] for c in ctx_list])[ci]
+    AVGS = np.stack([c[2] for c in ctx_list])[ci]
+    SCALES = np.stack([c[3] for c in ctx_list])[ci]
+    FMV = np.stack([c[5] for c in ctx_list])[ci]
+    CONST = np.array([c[6] for c in ctx_list])[ci]
+    D = np.stack(drows)
+    MP = PRICES + D * SCALES
+    is_const = ~np.isnan(CONST)
+    P_rev = np.where(is_const[:, None], CONST[:, None],
+                     (FMV > MP).astype(np.float64))
+    fb = (~is_const)[:, None] & np.isnan(FMV)
+    if fb.any():
+        for j, k in zip(*np.nonzero(fb)):
+            prov, t, spec = jobs[j]
+            ctx = ctx_list[ci[j]]
+            p = prov.revpred.predict(ctx[7][k], t, float(MP[j, k]))
+            P_rev[j, k] = 0.0 if p < 0.0 else (1.0 if p > 1.0 else p)
+    M = np.empty_like(MP)
+    for j, (prov, t, spec) in enumerate(jobs):
+        ctx = ctx_list[ci[j]]
+        pm = prov.perf._m
+        tk = spec.key
+        priors = ctx[4]
+        M[j] = [priors[k] if v is None else v
+                for k, v in enumerate(pm.get((nm, tk))
+                                      for nm in ctx[8])]
+    S = M * (1.0 - P_rev) * AVGS / HOUR
+    K2 = M * AVGS
+    smin = S.min(axis=1)
+    tie = S == smin[:, None]
+    k2m = np.where(tie, K2, np.inf)
+    win = tie & (k2m == k2m.min(axis=1)[:, None])
+    kb = win.argmax(axis=1)
+    out = []
+    for j in range(n):
+        k = int(kb[j])
+        ctx = ctx_list[ci[j]]
+        out.append(Choice(ctx[7][k], float(MP[j, k]), float(P_rev[j, k]),
+                          float(S[j, k])))
+    return out
+
+
+def _solve_rows_scalar(jobs, ctx_list, ctx_of, drows) -> list:
+    """Ragged-pool fallback: finish each pre-drawn job with the scalar
+    fused expression (same floats, deltas already consumed in order)."""
+    out = []
+    for j, (prov, t, spec) in enumerate(jobs):
+        _, prices, avgs, scales, priors, fmv, const_p, pool, names = \
+            ctx_list[ctx_of[j]]
+        pm = prov.perf._m
+        tk = spec.key
+        best = best_key = None
+        for k, d in enumerate(drows[j]):
+            mp = float(prices[k] + d * scales[k])
+            if not np.isnan(const_p):
+                p = float(const_p)
+            elif not np.isnan(fmv[k]):
+                p = 1.0 if fmv[k] > mp else 0.0
+            else:
+                p = prov.revpred.predict(pool[k], t, mp)
+                p = 0.0 if p < 0.0 else (1.0 if p > 1.0 else p)
+            m = pm.get((names[k], tk))
+            if m is None:
+                m = priors[k]
+            avg = float(avgs[k])
+            s_cost = m * (1.0 - p) * avg / HOUR
+            key = (s_cost, m * avg)
+            if best_key is None or key < best_key:
+                best, best_key = (pool[k], mp, p, s_cost), key
+        out.append(Choice(*best))
+    return out
 
 
 class ZeroRevPred:

@@ -611,6 +611,7 @@ class OracleRevPred:
     def __init__(self, market: SpotMarket):
         self.market = market
         self._fm_rows = None       # pool-aligned (fm list, len) pairs
+        self._fm_minute: dict = {}  # minute -> pool-aligned fm row (array)
 
     def _future_max(self, name: str) -> np.ndarray:
         trace = self.market.traces[name]
@@ -654,6 +655,18 @@ class OracleRevPred:
         if ent is None:
             ent = self._fm_rows = [self.pool_label_fm(i.name)
                                    for i in self.market.pool]
+        return ent
+
+    def pool_fm_minute(self, minute: int) -> np.ndarray:
+        """Pool-aligned next-hour-max row for one minute (NaN past a trace's
+        fm horizon — callers fall back to ``predict`` there).  Memoized per
+        minute so the cross-replica fused deploy solve indexes one array
+        instead of rebuilding the row per deploy window."""
+        ent = self._fm_minute.get(minute)
+        if ent is None:
+            ent = self._fm_minute[minute] = np.array(
+                [fml[minute] if minute < L else np.nan
+                 for fml, L in self.pool_fm_rows()])
         return ent
 
     def predict_pool_pairs(self, cands, t: float) -> list:

@@ -226,6 +226,85 @@ _JITTER_CACHE: Dict[tuple, list] = {}   # key -> [raw, clipped arr, clipped list
 _JITTER_CHUNK = 4096   # ticks synthesized per cache fill
 
 
+# Batch seeding for the jitter fill.  Each draw needs a Generator seeded by
+# SeedSequence([w_seed, int(t)]); constructing the SeedSequence and hashing
+# its entropy per tick is ~6x the cost of the draw itself.  The hash below
+# replicates SeedSequence.generate_state (O'Neill's seed-sequence mix, the
+# same constants numpy has shipped since 1.17) vectorized over all ticks of
+# a chunk, and a pre-seeded ISeedSequence shim hands the finished state
+# words to PCG64.  The replication is verified against numpy once per
+# process (`_vec_seed_ok`); on any mismatch — or entropy words that don't
+# fit uint32 — the fill falls back to the literal per-tick SeedSequence.
+_SS_XSHIFT = np.uint32(16)
+_SS_INIT_A = np.uint32(0x43b0d7e5)
+_SS_MULT_A = np.uint32(0x931e8875)
+_SS_INIT_B = np.uint32(0x8b51f9dd)
+_SS_MULT_B = np.uint32(0x58f38ded)
+_SS_MIX_L = np.uint32(0xca01f9dd)
+_SS_MIX_R = np.uint32(0x4973f715)
+
+
+class _PreSeed:
+    """ISeedSequence shim feeding precomputed state words to a BitGenerator."""
+    __slots__ = ("words",)
+
+    def generate_state(self, n_words, dtype=np.uint32):
+        return self.words.view(dtype)[:n_words]
+
+
+np.random.bit_generator.ISeedSequence.register(_PreSeed)
+
+
+def _seed_states(w_seed: int, times: np.ndarray) -> np.ndarray:
+    """``SeedSequence([w_seed, t]).generate_state(4, uint64)`` per ``t``,
+    vectorized — uint64[n, 4] of PCG64 seed states.  Both entropy words
+    must fit uint32 (callers guard)."""
+    n = len(times)
+    with np.errstate(over="ignore"):
+        hc = np.full(n, _SS_INIT_A, np.uint32)
+
+        def hashmix(v):
+            nonlocal hc
+            v = v ^ hc
+            hc = hc * _SS_MULT_A
+            v = v * hc
+            return v ^ (v >> _SS_XSHIFT)
+
+        def mix(x, y):
+            r = x * _SS_MIX_L - y * _SS_MIX_R
+            return r ^ (r >> _SS_XSHIFT)
+
+        zero = np.zeros(n, np.uint32)
+        pool = [hashmix(np.full(n, np.uint32(w_seed))),
+                hashmix(times.astype(np.uint32)),
+                hashmix(zero), hashmix(zero.copy())]
+        for i_src in range(4):
+            for i_dst in range(4):
+                if i_src != i_dst:
+                    pool[i_dst] = mix(pool[i_dst], hashmix(pool[i_src]))
+        hcb = np.full(n, _SS_INIT_B, np.uint32)
+        out = np.empty((n, 8), np.uint32)
+        for i_dst in range(8):
+            dv = pool[i_dst % 4] ^ hcb
+            hcb = hcb * _SS_MULT_B
+            dv = dv * hcb
+            out[:, i_dst] = dv ^ (dv >> _SS_XSHIFT)
+    return out.view(np.uint64)
+
+
+_VEC_SEED_OK: Optional[bool] = None
+
+
+def _vec_seed_ok() -> bool:
+    global _VEC_SEED_OK
+    if _VEC_SEED_OK is None:
+        ref = np.random.SeedSequence([12345, 67890]).generate_state(
+            4, np.uint64)
+        got = _seed_states(12345, np.array([67890], np.int64))[0]
+        _VEC_SEED_OK = bool(np.array_equal(ref, got))
+    return _VEC_SEED_OK
+
+
 def _jitter_ticks(w_seed: int, tick_s: float, k1: int) -> np.ndarray:
     """Dense array of per-tick jitters covering grid ticks 0..>=k1.
 
@@ -246,9 +325,23 @@ def _jitter_entry(w_seed: int, tick_s: float, k1: int) -> list:
     if k1 >= have:
         need = ((k1 + 1 + _JITTER_CHUNK - 1) // _JITTER_CHUNK) * _JITTER_CHUNK
         ext = np.empty(need - have, np.float64)
-        ss, rng = np.random.SeedSequence, np.random.default_rng
-        for i in range(len(ext)):
-            ext[i] = rng(ss([w_seed, int((have + i) * tick_s)])).normal(1.0, 0.02)
+        # int((have+i) * tick_s): float multiply then truncation, kept
+        # verbatim in the vectorized form (elementwise product + astype)
+        tvals = (np.arange(have, need, dtype=np.float64)
+                 * tick_s).astype(np.int64)
+        if (_vec_seed_ok() and 0 <= w_seed < 2**32 and len(tvals)
+                and 0 <= tvals[0] and tvals[-1] < 2**32):
+            states = _seed_states(w_seed, tvals)
+            shim = _PreSeed()
+            gen, pcg = np.random.Generator, np.random.PCG64
+            for i in range(len(ext)):
+                shim.words = states[i]
+                ext[i] = gen(pcg(shim)).normal(1.0, 0.02)
+        else:       # entropy out of uint32 range / replication check failed
+            ss, rng = np.random.SeedSequence, np.random.default_rng
+            for i in range(len(ext)):
+                ext[i] = rng(ss([w_seed, int((have + i) * tick_s)])
+                             ).normal(1.0, 0.02)
         arr = ext if ent is None else np.concatenate([ent[0], ext])
         clip = np.maximum(arr, 0.5)
         ent = _JITTER_CACHE[key] = [arr, clip, clip.tolist()]

@@ -14,6 +14,14 @@ On this container (CPU) the kernel runs in interpreter mode — useful for
 validation, not speed; on TPU it compiles natively (float64 inputs would
 need an f32 retune there, which is why numpy stays the default).
 ``tests/test_kernels.py`` pins kernel == reference.
+
+One subtlety: XLA contracts ``b*m + a*col`` into an FMA, which rounds
+once where numpy rounds twice.  The kernel paths stay bit-exact anyway
+because ``PerfModel.ewma`` defaults to 0.5 — both products are exact
+exponent shifts, so the contraction has nothing to re-round.  A
+non-dyadic ewma could drift by 1 ulp per fold step under the Pallas
+paths; the numpy default path is exact for any alpha.
+
 """
 
 from __future__ import annotations

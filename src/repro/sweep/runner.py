@@ -113,7 +113,7 @@ class SweepRunner:
 
     # ------------------------------------------------------------ driving
     def run(self, specs: Sequence[ScenarioSpec],
-            mode: str = "soa") -> SweepResult:
+            mode: str = "soa", soa_tables: bool = True) -> SweepResult:
         """Run all replicas concurrently with cross-replica batching.
 
         ``mode="soa"`` (the default) steps every replica's engine through
@@ -130,7 +130,12 @@ class SweepRunner:
         flushed as one grouped LM solve — replicas reach idle at different
         rounds, and flushing late turns many small fit dispatches into a few
         full ones.  Ordering never leaks between replicas: every request is
-        answered with pure functions of its own replica's state."""
+        answered with pure functions of its own replica's state.
+
+        ``soa_tables=False`` pins the stepper to the scalar lifecycle chain
+        for every replica (no batched decision tables) — the contract tests'
+        lever for table-vs-scalar equivalence; outcomes are bit-identical
+        either way."""
         if mode not in ("soa", "batched"):
             raise ValueError(f"unknown sweep mode {mode!r} "
                              "(expected 'soa' or 'batched')")
@@ -140,7 +145,7 @@ class SweepRunner:
             # imported lazily: soa.py reuses this module's _service
             from repro.sweep.soa import SoaSweep, soa_supported
             if soa_supported(tuners):
-                SoaSweep(tuners).run()
+                SoaSweep(tuners, use_tables=soa_tables).run()
                 results = [ReplicaResult(spec, t.result, _histories(t))
                            for spec, t in zip(specs, tuners)]
                 return SweepResult(results, time.perf_counter() - t0,

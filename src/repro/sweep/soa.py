@@ -22,6 +22,18 @@ no second copy of simulation state to keep coherent.  The EWMA fold and the
 segmented min run through ``repro.kernels.soa_step`` (numpy reference by
 default; the fused Pallas kernel takes over under REPRO_SOA_PALLAS=1).
 
+The round's lifecycle work is batched too (``_lifecycle``): every touched
+row's event is classified in one vectorized pass (``classify_rows`` — the
+five condition-chain branches as masks), schedulers that declare a
+``decision_table`` (see ``repro.tuner.scheduler``) answer the whole event
+batch in one call, and the state transitions are applied column-wise with
+Python re-entered only for the rows that actually act.  Schedulers without
+a table — and replicas whose backend snapshots real state — keep the
+verbatim scalar chain (``_chain``), pinning that path's coverage in the
+equivalence cube.  Deploy solves across every fused-supported replica
+sharing a round collapse into one vectorized Eq.-2 pass
+(``best_fused_multi``), per-replica RNG draws preserved in engine order.
+
 The per-replica engine remains the reference implementation:
 ``repro.tuner.equivalence.compare_sweep_modes`` pins this stepper bit-exact
 against the generator path (billing records, finish times, metric histories,
@@ -38,7 +50,10 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.market import HOUR
-from repro.kernels.soa_step import ewma_fold, segmented_min
+from repro.core.provisioner import best_fused_multi
+from repro.core.trial import SimTrialBackend, _jitter_entry
+from repro.kernels.soa_step import (_use_pallas, ewma_fold, segmented_min,
+                                    soa_step_fused)
 from repro.sweep.runner import SweepRunner
 from repro.tuner.engine import ProvisionBatch, Status
 from repro.tuner.events import (HourRotation, MetricReported, RevocationNotice,
@@ -50,6 +65,33 @@ _BIG = np.int64(1) << np.int64(60)
 # below this many touched rows the columnwise EWMA fold loses to the plain
 # per-row sequential fold (both are bit-exact, so the switch is free)
 _FOLD_MIN_ROWS = 8
+
+
+def classify_rows(t: np.ndarray, t_revoke: np.ndarray,
+                  notice_handled: np.ndarray, notice_s: np.ndarray,
+                  steps: np.ndarray, target: np.ndarray, stopped: np.ndarray,
+                  pause_requested: np.ndarray,
+                  t_start: np.ndarray) -> tuple:
+    """Vectorized lifecycle classification of touched rows — the engine
+    condition chain's five branches as one mask pass.
+
+    Returns ``(notice_due, cls)``: ``notice_due`` marks rows whose
+    revocation notice fires this tick (independent of the terminal event),
+    and ``cls`` is the first chain branch that acts — 1 revoke, 2 finish
+    (target reached or stopped), 3 scheduler pause, 4 one-hour rotation,
+    0 none — assigned in reverse branch order so the scalar chain's
+    priority (revoke > finish > pause > rotate) wins element-wise.
+    ``t_revoke`` uses +inf for allocations without a scheduled revocation.
+    Pure (arrays in, arrays out): the property test pins it against a
+    row-at-a-time replay of the chain's branch conditions."""
+    has_rev = np.isfinite(t_revoke)
+    notice_due = has_rev & ~notice_handled & (t >= t_revoke - notice_s)
+    cls = np.zeros(len(t), np.int8)
+    cls[(t - t_start) >= HOUR] = 4
+    cls[pause_requested] = 3
+    cls[(steps >= target) | stopped] = 2
+    cls[has_rev & (t >= t_revoke)] = 1
+    return notice_due, cls
 
 
 def soa_supported(tuners: Sequence[Tuner]) -> bool:
@@ -71,10 +113,27 @@ class SoaSweep:
     """Executes many Tuner replicas in lockstep SoA rounds; results land in
     each ``tuner.result`` exactly as ``run_cooperative`` would leave them."""
 
-    def __init__(self, tuners: Sequence[Tuner]):
+    def __init__(self, tuners: Sequence[Tuner], use_tables: bool = True):
         self.tuners = list(tuners)
         self.engines = [t.engine for t in self.tuners]
         self._rep_of = {id(e): r for r, e in enumerate(self.engines)}
+        # batched-lifecycle gate per replica: the scheduler must declare a
+        # decision table and the backend must not snapshot real state (the
+        # classifier's rollback arithmetic assumes the sim's free snapshot);
+        # ``use_tables=False`` pins every replica to the scalar chain (the
+        # table-vs-scalar contract test's lever)
+        self.use_tables = use_tables
+        self._table_rep = np.array(
+            [use_tables and e._has_table and not e._backend_snapshots
+             for e in self.engines], bool)
+        # jitter observations can be sliced straight from the shared cache
+        # only when every backend's noisy_step_times is the sim's own
+        self._direct_noise = all(
+            type(e.backend).noisy_step_times
+            is SimTrialBackend.noisy_step_times for e in self.engines)
+        self._seg5: Optional[np.ndarray] = None   # stage-5 boundary scan memo
+        self._pending_fold: Optional[tuple] = None
+        self._defer_fold = False
         R = len(self.tuners)
         self.R = R
         self.t = np.zeros(R)
@@ -109,6 +168,7 @@ class SoaSweep:
     # -------------------------------------------------------- row segments
     def _rebuild_all(self) -> None:
         """(Re)allocate every replica's row segment (capacity-doubled)."""
+        self._seg5 = None
         caps = []
         for r, eng in enumerate(self.engines):
             caps.append(max(8, 2 * len(eng._active)))
@@ -133,6 +193,7 @@ class SoaSweep:
         if grow and len(eng._active) > self.rep_cap[r]:
             self._rebuild_all()       # capacity exceeded: rare, full rebuild
             return
+        self._seg5 = None             # segment refresh moves next_k rows
         base = int(self.rep_start[r])
         cap = int(self.rep_cap[r])
         self.next_k[base:base + cap] = _BIG
@@ -170,7 +231,10 @@ class SoaSweep:
         self.t[act] = self.t_next[act]
         self.k_now[act] = np.round(self.t[act] / self.tick[act]).astype(
             np.int64)
-        seg_min = segmented_min(self.next_k, self.rep_start)
+        seg_min = self._seg5      # stage 5's scan, still valid when nothing
+        if seg_min is None:       # touched next_k since (rebuilds invalidate)
+            seg_min = segmented_min(self.next_k, self.rep_start)
+        self._seg5 = None
         runnable = (seg_min < _BIG) | self.has_waiting
         # idle replicas first (the engine returns before its horizon check)
         idle = act[~runnable[act]]
@@ -190,10 +254,19 @@ class SoaSweep:
         k_now_rows = self.k_now[self.row_rep]
         touched = np.nonzero(act_mask[self.row_rep]
                              & (self.next_k <= k_now_rows))[0]
-        new_points = self._advance_rows(touched)
-        for j, i in enumerate(touched):
-            self._chain(int(i), new_points[j])
-        # 3. deploys (batched across replicas like the generator path)
+        # Pallas rounds defer the fold into the fused stage-5 kernel, but
+        # only when every touched replica is on the table path (decision
+        # tables never read the perf matrix; the scalar chain's dispatches
+        # may)
+        self._defer_fold = bool(
+            len(touched) and _use_pallas()
+            and self._table_rep[self.row_rep[touched]].all())
+        new_points, sts = self._advance_rows(touched)
+        self._lifecycle(touched, new_points, sts)
+        # 3. deploys (batched across replicas like the generator path); a
+        # deferred fold must land first — the Eq.-2 solve reads the matrix
+        if self._pending_fold is not None and self.has_waiting[act].any():
+            self._flush_fold()
         deployed = self._deploys(act)
         # 4. boundary recompute for rows still/newly running
         recompute = [int(i) for i in touched
@@ -201,8 +274,17 @@ class SoaSweep:
         seen = set(recompute)
         recompute += [i for i in deployed if i not in seen]
         self._recompute(recompute)
-        # 5. next boundary per replica (the heap-pop equivalent)
-        seg_min = segmented_min(self.next_k, self.rep_start)
+        # 5. next boundary per replica (the heap-pop equivalent); with a
+        # fold still parked, one fused kernel dispatch does both halves
+        if self._pending_fold is not None:
+            pad, lens, m0, first, ew, perfs, keys = self._pending_fold
+            self._pending_fold = None
+            m, seg_min = soa_step_fused(pad, lens, m0, first, ew,
+                                        self.next_k, self.row_rep, self.R)
+            self._scatter_fold(m, perfs, keys, first)
+        else:
+            seg_min = segmented_min(self.next_k, self.rep_start)
+        self._seg5 = seg_min
         km = seg_min[act]
         kn = self.k_now[act]
         k = np.where(km >= _BIG, kn + 1, km)
@@ -230,16 +312,17 @@ class SoaSweep:
         self.t_next[act] = k * self.tick[act]
 
     # ------------------------------------------------------------- advance
-    def _advance_rows(self, touched: np.ndarray) -> List[list]:
+    def _advance_rows(self, touched: np.ndarray) -> tuple:
         """Vectorized ``_advance_window`` over all touched rows: one fused
         steps update, one batched EWMA fold over the deterministic noise
         draws, the same metric-crossing scan.  Mutates the TrialStates
-        exactly as the per-trial method would; returns each row's
-        new-points-for-dispatch list."""
+        exactly as the per-trial method would; returns ``(points, sts)`` —
+        each row's new-points-for-dispatch list and the gathered states
+        (reused by ``_lifecycle``)."""
         n = len(touched)
         out: List = [()] * n      # shared empty sentinel; rows with crossings
         if not n:                 # get their own point list below
-            return out
+            return out, []
         sts = [self.rows[i] for i in touched]
         reps = self.row_rep[touched]
         t = self.t[reps]
@@ -273,7 +356,8 @@ class SoaSweep:
             live, np.minimum(steps0 + (t - start) / spt, target), steps0)
         lidx = np.nonzero(live)[0]
         if len(lidx):
-            self._fold_perf(sts, reps, lidx, k0, k1, tick, spt)
+            self._fold_perf(sts, reps, lidx, k0, k1, tick, spt,
+                            defer=self._defer_fold)
         # steps as of the previous tick — what an every-tick scan had seen
         lim = (k1 - 1) * tick
         s_prev = np.where(lim <= start, steps0,
@@ -309,51 +393,259 @@ class SoaSweep:
             st.metrics_vals.extend(vals)
             sp = s_prev[j]
             out[j] = [(s, v) for s, v in zip(new_steps, vals) if s > sp]
-        return out
+        return out, sts
 
-    def _fold_perf(self, sts, reps, lidx, k0, k1, tick, spt) -> None:
-        """Perf-matrix catch-up for the live rows: gather each row's EWMA
-        entry, fold its tick observations (batched columnwise when the round
-        is wide enough), scatter back.  Bit-exact replay of
-        ``PerfModel.update_many`` per row."""
+    def _fold_perf(self, sts, reps, lidx, k0, k1, tick, spt,
+                   defer: bool = False) -> None:
+        """Perf-matrix catch-up for the live rows: each row's jitter
+        observations are sliced straight from the shared jitter cache into
+        one padded matrix (the same float64 products ``noisy_step_times``
+        returns, minus one array allocation per row), then folded
+        columnwise — or, with ``defer`` (Pallas round fusion), parked for
+        one fused fold+boundary-scan dispatch at round end.  Bit-exact
+        replay of ``PerfModel.update_many`` per row either way."""
         n_live = len(lidx)
+        engines = self.engines
+        lidx_l = lidx.tolist()
+        reps_l = reps.tolist()
+        k0l, k1l = k0.tolist(), k1.tolist()
+        tickl, sptl = tick.tolist(), spt.tolist()
+        if n_live < _FOLD_MIN_ROWS:
+            # narrow round: the columnwise fold loses to the sequential one
+            for j in lidx_l:
+                st = sts[j]
+                eng = engines[reps_l[j]]
+                eng.prov.perf.update_many(
+                    st.alloc.inst, st.spec,
+                    eng.backend.noisy_step_times(st.spec, st.alloc.inst,
+                                                 k0l[j], k1l[j], tickl[j],
+                                                 base=sptl[j]))
+            return
+        lens = np.empty(n_live, np.int64)
+        for o, j in enumerate(lidx_l):
+            lens[o] = k1l[j] - k0l[j] + 1
+        pad = np.zeros((n_live, int(lens.max())))
+        if self._direct_noise:
+            # one jitter-cache entry per (workload seed, tick grid), sliced
+            # and scaled directly into the pad rows
+            ents: dict = {}
+            for o, j in enumerate(lidx_l):
+                st = sts[j]
+                key = (st.spec.workload.seed, tickl[j])
+                ent = ents.get(key)
+                if ent is None or len(ent[1]) <= k1l[j]:
+                    ent = ents[key] = _jitter_entry(key[0], key[1], k1l[j])
+                np.multiply(ent[1][k0l[j]:k1l[j] + 1], sptl[j],
+                            out=pad[o, :int(lens[o])])
+        else:
+            for o, j in enumerate(lidx_l):
+                st = sts[j]
+                v = engines[reps_l[j]].backend.noisy_step_times(
+                    st.spec, st.alloc.inst, k0l[j], k1l[j], tickl[j],
+                    base=sptl[j])
+                pad[o, :len(v)] = v
         m0 = np.zeros(n_live)
         first = np.zeros(n_live, bool)
         ew = np.empty(n_live)
-        keys, perfs, insts, obs = [], [], [], []
-        engines = self.engines
-        k0l, k1l = k0.tolist(), k1.tolist()
-        tickl, sptl = tick.tolist(), spt.tolist()
-        for o, j in enumerate(lidx.tolist()):
+        keys, perfs = [], []
+        for o, j in enumerate(lidx_l):
             st = sts[j]
-            eng = engines[reps[j]]
-            inst = st.alloc.inst
-            perf = eng.prov.perf
-            key = (inst.name, st.key)
+            perf = engines[reps_l[j]].prov.perf
+            key = (st.alloc.inst.name, st.key)
             keys.append(key)
             perfs.append(perf)
-            insts.append(inst)
-            obs.append(eng.backend.noisy_step_times(
-                st.spec, inst, k0l[j], k1l[j], tickl[j], base=sptl[j]))
             v = perf._m.get(key)
             if v is not None and perf._observed.get(key):
                 m0[o] = v
             else:
                 first[o] = True
             ew[o] = perf.ewma
-        if n_live < _FOLD_MIN_ROWS:
-            for o in range(n_live):
-                perfs[o].update_many(insts[o], sts[lidx[o]].spec, obs[o])
+        if defer:
+            self._pending_fold = (pad, lens, m0, first, ew, perfs, keys)
             return
-        lens = np.array([len(v) for v in obs], np.int64)
-        pad = np.zeros((len(obs), int(lens.max())))
-        for o, v in enumerate(obs):
-            pad[o, :len(v)] = v
         m = ewma_fold(pad, lens, m0, first, ew)
-        for o in range(len(lidx)):
+        self._scatter_fold(m, perfs, keys, first)
+
+    def _flush_fold(self) -> None:
+        """Fold a parked Pallas-round batch now (a deploy solve is about
+        to read the perf matrix)."""
+        pad, lens, m0, first, ew, perfs, keys = self._pending_fold
+        self._pending_fold = None
+        m = ewma_fold(pad, lens, m0, first, ew)
+        self._scatter_fold(m, perfs, keys, first)
+
+    @staticmethod
+    def _scatter_fold(m, perfs, keys, first) -> None:
+        for o in range(len(keys)):
             perfs[o]._m[keys[o]] = float(m[o])
             if first[o]:
                 perfs[o]._observed[keys[o]] = True
+
+    # ----------------------------------------------------- batched lifecycle
+    def _lifecycle(self, touched: np.ndarray, new_points: list,
+                   sts: list) -> None:
+        """Batched lifecycle pass over the round's touched rows.
+
+        Three phases, replica-grouped: (A) classify every row's chain branch
+        in one vectorized ``classify_rows`` call and collect the events the
+        scheduler cares about into decision-table *entries*; (B) one
+        ``decision_table`` call per replica answers the whole batch, answers
+        applied to the TrialStates (which can move a row across branches —
+        a STOP answer turns a would-rotate row into a finish, exactly as the
+        scalar dispatch would); (C) the state transitions for acting rows,
+        applied per row in row order (notice before the terminal event) so
+        each engine's event log interleaves exactly as the scalar chain's.
+        Replicas outside the table gate — no ``decision_table``, snapshotting
+        backend, or ``use_tables=False`` — run the verbatim scalar
+        ``_chain`` instead, same order."""
+        n = len(touched)
+        if not n:
+            return
+        reps = self.row_rep[touched]
+        t = self.t[reps]
+        notice_s = np.array([self.engines[r].cfg.notice_s
+                             for r in reps.tolist()])
+        trev, nh, tstart, steps, target, stopped, pause = (
+            np.array(c) for c in zip(
+                *[(math.inf if st.alloc.t_revoke is None
+                   else st.alloc.t_revoke,
+                   st.notice_handled, st.alloc.t_start, st.steps,
+                   st.target_steps, st.stopped, st.pause_requested)
+                  for st in sts]))
+        nh = nh.astype(bool)
+        stopped = stopped.astype(bool)
+        pause = pause.astype(bool)
+        notice_due, cls = classify_rows(t, trev, nh, notice_s, steps, target,
+                                        stopped, pause, tstart)
+        bounds = np.nonzero(np.diff(reps))[0] + 1
+        table_rep = self._table_rep
+        for g in np.split(np.arange(n), bounds):
+            j0 = int(g[0])
+            r = int(reps[j0])
+            eng = self.engines[r]
+            if not table_rep[r]:
+                for j in g.tolist():
+                    self._chain(int(touched[j]), new_points[j])
+                continue
+            sch = eng.scheduler
+            tev = eng._table_events
+            met_ok = MetricReported in tev
+            rev_ok = TrialRevoked in tev
+            # -- A: collect table entries in scalar chain order (metrics of a
+            # row before its revocation; rows in row order)
+            entries: list = []
+            erows: list = []
+            for j in g.tolist():
+                pts = new_points[j]
+                if pts and met_ok:
+                    entries.append(("metric", sts[j], pts))
+                    erows.append((j, False))
+                if cls[j] == 1 and rev_ok:
+                    st = sts[j]
+                    # predicted checkpoint at dispatch time: the notice
+                    # (fired just before the revoke) checkpoints the sim
+                    # backend at the current step count for free
+                    ck = st.steps if notice_due[j] else st.ckpt_steps
+                    entries.append(("revoked", st, (st.steps - ck, ck)))
+                    erows.append((j, True))
+            # -- B: one table call answers the batch; metric answers land on
+            # the TrialStates now (revoke answers wait for their transition)
+            rev_ans: dict = {}
+            if entries:
+                answers = sch.decision_table(entries)
+                for (j, is_rev), ans in zip(erows, answers):
+                    if ans is None:
+                        continue
+                    if is_rev:
+                        rev_ans[j] = ans
+                        continue
+                    st = sts[j]
+                    do_stop, do_pause, tg = ans
+                    if do_stop:
+                        st.stopped = True
+                    if do_pause:
+                        st.pause_requested = True
+                    if tg is not None:
+                        st.target_steps = tg
+                    if cls[j] != 1:  # answers can move the row across branches
+                        if st.steps >= st.target_steps or st.stopped:
+                            cls[j] = 2
+                        elif st.pause_requested:
+                            cls[j] = 3
+                        elif cls[j] != 4:
+                            cls[j] = 0
+            # -- C: transitions, per row in row order
+            acting = g[notice_due[g] | (cls[g] != 0)]
+            te = eng.t
+            cfg = eng.cfg
+            for j in acting.tolist():
+                st = sts[j]
+                i = int(touched[j])
+                if notice_due[j]:
+                    eng._checkpoint(st, deadline_s=cfg.notice_s)
+                    st.notice_handled = True
+                    eng.events.append((te, "notice", st.spec.key))
+                c = int(cls[j])
+                if c == 0:
+                    continue
+                if c == 1:                # revocation fires
+                    lost = st.steps - st.ckpt_steps
+                    st.lost_steps += lost
+                    st.steps = st.ckpt_steps
+                    st._next_val = int(st.steps
+                                       // st.spec.workload.val_every)
+                    nn = int(st._next_val)
+                    st.metrics_steps = st.metrics_steps[:nn]
+                    st.metrics_vals = st.metrics_vals[:nn]
+                    eng._release(st, revoked=True)
+                    st.status = Status.WAITING
+                    ans = rev_ans.get(j)
+                    if ans is not None:
+                        do_stop, do_pause, tg = ans
+                        if do_stop:
+                            st.stopped = True
+                        if do_pause:
+                            st.pause_requested = True
+                        if tg is not None:
+                            st.target_steps = tg
+                    if st.pause_requested:
+                        eng._park(st)     # free rung boundary (ASHA)
+                    else:
+                        self.waiting[r].append(st)
+                        self.has_waiting[r] = True
+                elif c == 2:              # finished / stopped
+                    st.pause_requested = False
+                    eng._checkpoint(st)
+                    eng._release(st, revoked=False)
+                    st.status = Status.FINISHED
+                    st.finish_time = te + eng._ckpt_time(st)
+                    eng.events.append((te, "finish", st.spec.key, st.steps))
+                elif c == 3:              # scheduler pause
+                    eng._checkpoint(st)
+                    eng._release(st, revoked=False)
+                    eng._park(st)
+                else:                     # c == 4: one-hour rotation
+                    # (HourRotation is table-inert, so the held-duration
+                    # payload the scalar path dispatches is not needed)
+                    eng._checkpoint(st)
+                    eng._release(st, revoked=False)
+                    st.status = Status.WAITING
+                    eng.events.append((te, "rotate", st.spec.key))
+                    if st.pause_requested:
+                        eng._park(st)
+                    else:
+                        self.waiting[r].append(st)
+                        self.has_waiting[r] = True
+                self.next_k[i] = _BIG
+            # promotions staged while answering drain once per batch,
+            # chronological order preserved by the schedulers' table shims
+            if entries and eng._drain_promos:
+                promos = sch.take_promotions()
+                if promos:
+                    for key, tg in promos.items():
+                        eng._promote(key, tg)
+            if eng._pending_deploy:
+                self._note_promotions(r, eng)
 
     # --------------------------------------------------------------- chain
     def _chain(self, i: int, pts: list) -> None:
@@ -462,6 +754,7 @@ class SoaSweep:
         revocation predictions answered in one cross-replica batch, then
         choices applied in the same order.  Returns deployed row indices."""
         provs = []
+        fused: List[tuple] = []
         deployed: List[int] = []
         for r in act:
             r = int(r)
@@ -486,23 +779,40 @@ class SoaSweep:
             self.waiting[r] = []
             self.has_waiting[r] = False
             if eng.prov.fused_supported():
-                # oracle/const predictor: draw + label + argmin fused per
-                # trial (same per-engine RNG and billing order — deploys
-                # never consume the provisioner stream)
-                prov = eng.prov
-                for st in got:
-                    choice = prov.best_fused(eng.t, st.spec,
-                                             st.exclude or None)
-                    eng._deploy_chosen(st, choice)
-                    deployed.append(self._row_of(st))
-                if eng._pending_deploy:
-                    self.pending_reps.add(r)
-                    self.rebuild.add(r)
+                if any(st.exclude for st in got):
+                    # exclusions perturb the candidate set per trial; keep
+                    # the per-trial solve (same RNG draws either way)
+                    prov = eng.prov
+                    for st in got:
+                        choice = prov.best_fused(eng.t, st.spec,
+                                                 st.exclude or None)
+                        eng._deploy_chosen(st, choice)
+                        deployed.append(self._row_of(st))
+                    if eng._pending_deploy:
+                        self.pending_reps.add(r)
+                        self.rebuild.add(r)
+                else:
+                    # cross-replica fused solve: collect now, one stacked
+                    # Eq.-2 argmin after the loop.  Collection draws nothing
+                    # and the solves read only predictor state, so applying
+                    # choices afterwards is bit-exact in engine order.
+                    for st in got:
+                        fused.append((eng, r, st))
                 continue
             provs.append(ProvisionBatch(eng, eng.t, [
                 (st, eng.prov.candidates(eng.t, st.spec,
                                          exclude=st.exclude or None))
                 for st in got]))
+        if fused:
+            choices = best_fused_multi(
+                [(eng.prov, eng.t, st.spec) for eng, _, st in fused])
+            for (eng, r, st), choice in zip(fused, choices):
+                eng._deploy_chosen(st, choice)
+                deployed.append(self._row_of(st))
+            for eng, r, _ in fused:
+                if eng._pending_deploy:
+                    self.pending_reps.add(r)
+                    self.rebuild.add(r)
         if not provs:
             return deployed
         SweepRunner._service(provs)
@@ -555,6 +865,7 @@ class SoaSweep:
         cand = np.where(b < cand, b, cand)
         start = np.where(ready > last_t, ready, last_t)
         b = start + (target - steps) * spt            # finish
+        kfin = np.ceil(b / tick - 1e-7).astype(np.int64)
         cand = np.where(b < cand, b, cand)
         prev = self.has_preview[reps]
         if not prev.all():
@@ -572,9 +883,16 @@ class SoaSweep:
             for j in np.nonzero(prev)[0]:
                 st = sts[j]
                 eng = self.engines[reps[j]]
+                kl = int(k[j])
+                if eng._preview_stable:
+                    # stable previews (answer independent of the scan cap):
+                    # scan to the finish horizon so the memoized coverage
+                    # amortizes across this allocation's recomputes
+                    kf = int(kfin[j])
+                    if kf > kl:
+                        kl = kf
                 k_act = eng._preview_boundary(st, float(start[j]),
-                                              float(spt[j]), int(kn[j]),
-                                              int(k[j]))
+                                              float(spt[j]), int(kn[j]), kl)
                 if k_act is not None and k_act < k[j]:
                     k[j] = k_act
         for j, i in enumerate(idx):

@@ -218,6 +218,9 @@ class ExecutionEngine:
         self._seq = itertools.count()
         self._pending_deploy = False
         self._preview_stable = False
+        self._table_events: frozenset = frozenset()
+        self._has_table = False
+        self._started_inert = False
         self._flush_k: Optional[int] = None   # armed deploy-window flush tick
 
     # ------------------------------------------------------------- trials
@@ -240,6 +243,18 @@ class ExecutionEngine:
         # schedulers exposing per-grid-index stop verdicts let the preview
         # skip trajectory materialization entirely (see _preview_boundary)
         self._preview_fast = getattr(scheduler, "preview_stop_grid", None)
+        # batched decision-table capability (see Scheduler.decision_table):
+        # only the two batchable event classes are honored — anything wider
+        # keeps the scalar chain.  A table scheduler declares every class
+        # outside table_events inert, which licenses skipping those
+        # dispatches entirely (TrialStarted below; the SoA stepper skips the
+        # lifecycle narration events the same way).
+        self._table_events = getattr(scheduler, "table_events", frozenset())
+        self._has_table = (
+            getattr(type(scheduler), "decision_table", None) is not None
+            and self._table_events <= {MetricReported, TrialRevoked})
+        self._started_inert = (self._has_table
+                               and TrialStarted not in self._table_events)
 
     def add_trial(self, spec: TrialSpec, target_steps: float) -> TrialState:
         assert spec.key not in self._by_key, f"duplicate trial key {spec.key}"
@@ -326,8 +341,12 @@ class ExecutionEngine:
         st._spt = self.backend.base_step_time(st.spec, alloc.inst)
         self.events.append((self.t, "deploy", st.spec.key, choice.inst.name,
                             round(choice.max_price, 4), round(choice.p_revoke, 3)))
-        self._dispatch(TrialStarted(self.t, st.key, choice.inst.name,
-                                    choice.max_price, choice.p_revoke), st)
+        if not self._started_inert:
+            # table schedulers declare TrialStarted inert (no state change,
+            # no staged promotions pending at this point), so the dispatch
+            # — and its per-event promotion drain — is skippable
+            self._dispatch(TrialStarted(self.t, st.key, choice.inst.name,
+                                        choice.max_price, choice.p_revoke), st)
 
     def _advance(self, st: TrialState, dt: float) -> List[tuple]:
         """Simulate ``dt`` seconds of compute; returns new (step, value)

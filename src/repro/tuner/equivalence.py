@@ -143,12 +143,13 @@ def compare_runs(workload: Workload, **kw) -> List[str]:
     return compare_engines(fast_eng, exact_eng, fast_res, exact_res)
 
 
-def compare_sweep_modes(specs) -> List[str]:
+def compare_sweep_modes(specs, use_tables: bool = True) -> List[str]:
     """Run one ScenarioSpec grid through the SoA stepper and through the
     generator round-robin path on independently built replica sets (shared
     caches dropped before each, so neither warms the other) and diff every
     replica's engine pairwise with ``compare_engines``.  Empty == the SoA
-    fast path is bit-exact."""
+    fast path is bit-exact.  ``use_tables=False`` pins the stepper to the
+    scalar lifecycle chain (no batched decision tables)."""
     from repro.sweep import runner as runner_mod
     from repro.sweep.soa import SoaSweep, soa_supported
 
@@ -157,7 +158,7 @@ def compare_sweep_modes(specs) -> List[str]:
     soa_tuners = runner.prepare(specs)
     if not soa_supported(soa_tuners):
         return ["grid not soa_supported — nothing to compare"]
-    SoaSweep(soa_tuners).run()
+    SoaSweep(soa_tuners, use_tables=use_tables).run()
 
     runner_mod.clear_shared_caches()
     gen_res = runner.run(specs, mode="batched")

@@ -62,6 +62,9 @@ class HyperbandScheduler(Scheduler):
         self._weights: Optional[np.ndarray] = None
         self._bracket_of: Dict[str, int] = {}
         self._dry = False
+        # promotions discovered while answering a decision-table batch, in
+        # chronological (entry) order — see decision_table below
+        self._table_promos: Dict[str, float] = {}
 
     # ------------------------------------------------------------- set-up
     def _build(self, w) -> None:
@@ -140,8 +143,32 @@ class HyperbandScheduler(Scheduler):
         br = self._bracket(event.trial)
         return br.on_event(event, view) if br is not None else CONTINUE
 
+    # ------------------------------------------- batched decision table
+    # Routed entry-by-entry to the owning bracket's table.  The subtlety is
+    # promotion *order*: the scalar path drains promotions after every
+    # event, so cross-bracket promotions interleave chronologically; a
+    # single bracket-major union at batch end would reorder them (and with
+    # them the resume/deploy RNG sequence).  Each entry's freshly staged
+    # bracket promotions are therefore folded into ``_table_promos``
+    # immediately, preserving the scalar drain order.
+    table_events = ASHAScheduler.table_events
+
+    def decision_table(self, entries) -> list:
+        out = []
+        tp = self._table_promos
+        for ent in entries:
+            br = self._bracket(ent[1].key)
+            if br is None:
+                out.append(None)
+                continue
+            out.append(br.decision_table([ent])[0])
+            if br._promos:
+                tp.update(br.take_promotions())
+        return out
+
     def take_promotions(self) -> Dict[str, float]:
-        promos: Dict[str, float] = {}
+        promos: Dict[str, float] = dict(self._table_promos)
+        self._table_promos.clear()
         for br in self.brackets:
             promos.update(br.take_promotions())
         return promos

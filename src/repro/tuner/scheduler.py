@@ -128,7 +128,47 @@ class Scheduler:
           (in job order) before ``on_idle`` is called.
       predictions(views) -> {key: predicted_final_metric}
       rank(views) -> [key, ...]   best first (lower metric = better)
+
+    Batched decision tables (SoA fast path).  A scheduler may opt into
+    answering a whole event batch at once by setting ``table_events`` and
+    overriding ``decision_table``; see the attribute docs below.  The SoA
+    sweep stepper (``repro.sweep.soa``) then replaces its per-row scalar
+    dispatch chain with one table call per replica per round; policies
+    without the capability keep the verbatim per-event chain.
     """
+
+    #: Decision-table capability.  ``None`` (the base) = scalar chain only.
+    #: An opted-in scheduler overrides this with a method
+    #: ``decision_table(entries) -> [answer, ...]`` where ``entries`` is a
+    #: list of ``("metric", view, [(step, value), ...])`` and
+    #: ``("revoked", view, (lost_steps, ckpt_steps))`` tuples in engine
+    #: chain order (per trial: its metric batch strictly before its
+    #: revocation), and each answer is ``None`` (every dispatch would be a
+    #: side-effect-free CONTINUE) or ``(stop, pause, target)`` — the
+    #: cumulative flag effect the per-event ``Decision``s would have had
+    #: (``stop``/``pause`` booleans, ``target`` a new step budget or None).
+    #: The contract mirrors the scalar chain exactly:
+    #:   * processing entry i must leave the scheduler in the same state as
+    #:     dispatching entry i's events through ``on_event`` in order;
+    #:   * events whose class is NOT in ``table_events`` are promised inert
+    #:     (CONTINUE, no observable state change), so the engine may skip
+    #:     dispatching them entirely — including ``TrialStarted`` at deploy
+    #:     time and the lifecycle narration events;
+    #:   * the table must not read view attributes the engine mutates while
+    #:     applying answers (``stopped``/``pause_requested``/
+    #:     ``target_steps``/``status``) — it maintains its own state;
+    #:   * asynchronous promotions are staged as usual and drained once via
+    #:     ``take_promotions`` after the whole batch, which must be
+    #:     equivalent to the scalar path's per-event drain (promotions only
+    #:     ever touch parked — non-running — trials), with the *chronological*
+    #:     staging order preserved.
+    decision_table = None
+
+    #: Event classes the decision table acts on.  Everything else is
+    #: declared inert per the contract above.  Only ``MetricReported`` and
+    #: ``TrialRevoked`` are batchable; a table declaring any other class
+    #: falls back to the scalar chain in the stepper.
+    table_events: frozenset = frozenset()
 
     def on_trial_added(self, spec: TrialSpec) -> Optional[float]:
         return None

@@ -256,6 +256,43 @@ class ASHAScheduler(Scheduler):
                 return PAUSE
         return CONTINUE
 
+    # ------------------------------------------- batched decision table
+    # Rung lookups and revocation parks are the only acting events; the
+    # ordered replay below mutates the same rung/pause/promo state the
+    # per-event path does, entry by entry, so batch == scalar exactly.
+    # Promotions stage into ``_promos`` in chronological order and are
+    # drained once after the batch — equivalent to the per-event drain
+    # because ASHA only ever promotes parked (non-running) trials, whose
+    # state nothing later in the batch reads back.
+    table_events = frozenset({MetricReported, TrialRevoked})
+
+    def decision_table(self, entries) -> list:
+        rungs = self.rungs
+        rung_idx = self._rung_idx
+        out = []
+        for kind, view, payload in entries:
+            key = view.key
+            if kind == "metric":
+                pause = False
+                for step, value in payload:
+                    i = rung_idx.get(key, 0)
+                    if i < len(rungs) and step >= rungs[i]:
+                        self._results[i][key] = value
+                        rung_idx[key] = i + 1
+                        self._promos.update(self._sweep_promotable())
+                        if not self._in_top(i, key):
+                            self._paused[key] = i
+                            pause = True
+                out.append((False, True, None) if pause else None)
+            else:                                    # revoked
+                i = rung_idx.get(key, 0) - 1
+                if i >= 0 and not self._in_top(i, key):
+                    self._paused[key] = i
+                    out.append((False, True, None))
+                else:
+                    out.append(None)
+        return out
+
     def take_promotions(self) -> Dict[str, float]:
         promos, self._promos = self._promos, {}
         return promos

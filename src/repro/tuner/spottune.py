@@ -114,6 +114,44 @@ class SpotTuneScheduler(Scheduler):
                 return STOP
         return CONTINUE
 
+    # ------------------------------------------- batched decision table
+    # Only metric reports act; every other event class is inert by
+    # construction of ``on_event`` above, which is the table contract.
+    table_events = frozenset({MetricReported})
+
+    def decision_table(self, entries) -> list:
+        """θ plateau scan over a whole event batch: one ``_last_big`` lookup
+        per trial instead of one ``converged()`` pass per metric point.
+
+        Within one tick all of a trial's crossed points dispatch against the
+        same post-advance history, so the scalar chain's per-point checks
+        collapse to a single verdict on the full prefix — ``on_event``'s
+        ``converged(metrics_vals)`` restated through the shared plateau
+        accumulator (``lb[L-2] <= L-W-1`` == converged at length L)."""
+        W = self.ec.plateau_window
+        tol = self.ec.plateau_tol
+        stopped = self._stopped
+        out = []
+        for kind, view, _payload in entries:
+            if kind != "metric" or view.key in stopped:
+                out.append(None)
+                continue
+            vals = view.metrics_vals
+            L = len(vals)
+            if L < W:
+                out.append(None)
+            elif W < 2:                # converged() degenerates to True
+                stopped.add(view.key)
+                out.append((True, False, None))
+            else:
+                lb = _last_big((view.key, tol), vals, (), L)
+                if lb[L - 2] <= L - W - 1:
+                    stopped.add(view.key)
+                    out.append((True, False, None))
+                else:
+                    out.append(None)
+        return out
+
     def preview_metrics(self, view, steps, vals, ticks) -> Optional[int]:
         """First upcoming metric point whose dispatch would STOP the trial.
 
@@ -271,6 +309,13 @@ class AdaptiveSpotTuneScheduler(SpotTuneScheduler):
     phase 2 promotes the top-``mcnt`` to the full budget.  Requires a
     Tuner constructed with ``initial_trials`` (so the searcher is not
     drained up front)."""
+
+    # the TrimTuner feedback loop (adaptive suggestion waves keyed off
+    # results as they land) stays on the verbatim scalar chain: correctness
+    # does not depend on it, but keeping one production policy on the
+    # scalar path pins that path's equivalence coverage in the sweep cube
+    decision_table = None
+    table_events = frozenset()
 
     def __init__(self, theta: float = 0.7, mcnt: int = 3,
                  earlycurve: Optional[EarlyCurve] = None, seed: int = 0,

@@ -185,6 +185,42 @@ def test_segmented_min_matches_python(seed):
     assert np.array_equal(got, want)
 
 
+# --------------------- batched jitter seeding (the SoA fold's input path)
+
+
+def test_seed_states_replicate_seedsequence():
+    """The vectorized seed-sequence mix must reproduce numpy's
+    ``SeedSequence([w_seed, t]).generate_state(4, uint64)`` exactly —
+    this is the check `_vec_seed_ok` gates the fast jitter fill on."""
+    from repro.core.trial import _seed_states, _vec_seed_ok
+
+    assert _vec_seed_ok()       # current numpy passes the runtime gate
+    nprng = np.random.default_rng(11)
+    for s in nprng.integers(0, 2**32, 6):
+        ts = nprng.integers(0, 2**32, 40).astype(np.int64)
+        got = _seed_states(int(s), ts)
+        for j in (0, 7, 39):
+            want = np.random.SeedSequence(
+                [int(s), int(ts[j])]).generate_state(4, np.uint64)
+            assert np.array_equal(got[j], want), (s, ts[j])
+
+
+def test_jitter_entry_batch_fill_equals_scalar_fill():
+    import repro.core.trial as trial
+
+    trial._JITTER_CACHE.clear()
+    fast = trial._jitter_entry(9, 10.0, 5000)[0].copy()
+    trial._JITTER_CACHE.clear()
+    orig = trial._vec_seed_ok
+    trial._vec_seed_ok = lambda: False      # force the literal per-tick path
+    try:
+        slow = trial._jitter_entry(9, 10.0, 5000)[0].copy()
+    finally:
+        trial._vec_seed_ok = orig
+        trial._JITTER_CACHE.clear()
+    assert np.array_equal(fast, slow)
+
+
 _PALLAS_SCRIPT = r"""
 import importlib.util
 import numpy as np
@@ -215,6 +251,16 @@ assert np.array_equal(m, m_ref), (m - m_ref)
 assert np.array_equal(seg, seg_ref), (seg, seg_ref)
 m2 = ewma_fold(obs, lens, m0, first, ewma)   # dispatch honors the env flag
 assert np.array_equal(m2, m_ref), (m2 - m_ref)
+# decoupled shapes: the stepper folds only the round's live rows (F) while
+# the boundary scan covers every segment row (N != F)
+N = 113
+row_rep2 = np.sort(rng.integers(0, 9, N)).astype(np.int64)
+next_k2 = rng.integers(0, 1_000_000, N).astype(np.int64)
+next_k2[rng.random(N) < 0.4] = _BIG
+starts2 = np.searchsorted(row_rep2, np.arange(9)).astype(np.int64)
+m3, seg3 = soa_step_fused(obs, lens, m0, first, ewma, next_k2, row_rep2, 9)
+assert np.array_equal(m3, m_ref), (m3 - m_ref)
+assert np.array_equal(seg3, segmented_min_ref(next_k2, starts2))
 print("OK")
 """
 

@@ -743,6 +743,102 @@ def test_hyperband_adaptive_bracket_weights_deterministic():
 
 
 # ---------------------------------------------------------------------------
+# batched decision tables (ISSUE 8): table path == scalar chain, per policy
+# ---------------------------------------------------------------------------
+
+
+def _declares_table(name) -> bool:
+    return make_scheduler(name, LOR, PARAMS).decision_table is not None
+
+
+def test_decision_table_declarations():
+    """The registry's table capability map is explicit: SpotTune and the
+    rung policies batch (their ``table_events`` stay within the batchable
+    vocabulary), while the feedback policies keep the scalar chain — both
+    paths must stay represented in the equivalence cube."""
+    from repro.tuner.events import MetricReported as MR, TrialRevoked as TR
+
+    declared = {n for n in SCHEDULER_NAMES if _declares_table(n)}
+    assert declared == {"spottune", "asha", "hyperband"}, declared
+    for name in declared:
+        sch = make_scheduler(name, LOR, PARAMS)
+        assert sch.table_events, name
+        assert sch.table_events <= {MR, TR}, \
+            f"{name}: table_events outside the batchable vocabulary"
+    for name in set(SCHEDULER_NAMES) - declared:
+        sch = make_scheduler(name, LOR, PARAMS)
+        assert not sch.table_events, \
+            f"{name}: table_events declared without decision_table"
+
+
+@pytest.mark.parametrize("name", SCHEDULER_NAMES)
+def test_decision_table_equals_scalar_chain_on_sweep_cube(name):
+    """Per policy, the 4-workload x 5-market-seed replica grid through the
+    SoA stepper with batched decision tables and again with the scalar
+    lifecycle chain (``soa_tables=False``): results and metric histories
+    must be bit-identical.  For the policies without a table both runs
+    take the scalar path, pinning the lever itself inert."""
+    from repro.sweep import SweepRunner, clear_shared_caches, scenario_grid
+
+    names = [w.name for w in WORKLOADS[:4]]
+    specs = scenario_grid(names, (1, 3, 7, 11, 23), revpred="oracle",
+                          theta=0.7, days=DAYS, scheduler=name)
+    clear_shared_caches()
+    res_tab = SweepRunner().run(specs, soa_tables=True)
+    clear_shared_caches()
+    res_sca = SweepRunner().run(specs, soa_tables=False)
+    assert res_tab.mode == res_sca.mode == "soa"
+    for ra, rb in zip(res_tab.replicas, res_sca.replicas):
+        assert ra.result == rb.result, ra.spec
+        assert ra.metrics == rb.metrics, ra.spec
+
+
+@given(st.integers(0, 10_000), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_classify_rows_matches_scalar_branch_order(seed, n):
+    """Property: the vectorized lifecycle classifier equals a row-at-a-time
+    replay of the engine chain's branch conditions (revoke > finish >
+    pause > rotate), including the independent notice trigger."""
+    import math
+
+    from repro.core.market import HOUR
+    from repro.sweep.soa import classify_rows
+
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0, 3 * HOUR, n)
+    t_revoke = np.where(rng.random(n) < 0.4, math.inf,
+                        rng.uniform(0, 3 * HOUR, n))
+    notice_handled = rng.random(n) < 0.5
+    notice_s = rng.choice([0.0, 30.0, 120.0], n)
+    target = rng.integers(1, 500, n).astype(float)
+    steps = np.where(rng.random(n) < 0.3, target,
+                     rng.uniform(0, 500, n))
+    stopped = rng.random(n) < 0.2
+    pause_requested = rng.random(n) < 0.2
+    t_start = t - rng.uniform(0, 2 * HOUR, n)
+
+    notice_due, cls = classify_rows(t, t_revoke, notice_handled, notice_s,
+                                    steps, target, stopped, pause_requested,
+                                    t_start)
+    for j in range(n):
+        has_rev = math.isfinite(t_revoke[j])
+        want_notice = (has_rev and not notice_handled[j]
+                       and t[j] >= t_revoke[j] - notice_s[j])
+        if has_rev and t[j] >= t_revoke[j]:
+            want = 1
+        elif steps[j] >= target[j] or stopped[j]:
+            want = 2
+        elif pause_requested[j]:
+            want = 3
+        elif t[j] - t_start[j] >= HOUR:
+            want = 4
+        else:
+            want = 0
+        assert notice_due[j] == want_notice, j
+        assert cls[j] == want, j
+
+
+# ---------------------------------------------------------------------------
 # property-based widenings (auto-skip without hypothesis)
 # ---------------------------------------------------------------------------
 
