@@ -1,0 +1,112 @@
+"""Allocation-ledger microbench (``repro.core.market`` ledgers).
+
+Times the market's acquire/release layer in isolation — the ~40% of a SoA
+round the columnar ledger vectorizes:
+
+  * scalar vs columnar single acquire+release round-trips (the per-row
+    floor both ledgers pay on un-batchable traffic);
+  * a deploy burst answered bid-by-bid against the scalar ledger vs one
+    ``acquire_batch_multi`` call into the columnar crossing search (the
+    sweep's actual deploy shape: many bids sharing a (trace, minute)).
+
+Every timed run cross-checks the two ledgers bit-exact on rows, revocation
+times, and billing totals — a drifted fast path would fail here before it
+failed the equivalence cube.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.market import MINUTE, SpotMarket, acquire_batch_multi
+
+DAYS = 8.0
+SEED = 3
+BURST = 64          # bids per batched deploy group
+
+
+def _markets():
+    return (SpotMarket(days=DAYS, seed=SEED, ledger="scalar"),
+            SpotMarket(days=DAYS, seed=SEED, ledger="columnar"))
+
+
+def _burst_jobs(m: SpotMarket, t: float, rng) -> list:
+    jobs = []
+    for _ in range(BURST):
+        inst = m.pool[int(rng.integers(len(m.pool)))]
+        mp = float(m.price(inst, t) * rng.uniform(0.85, 1.3))
+        jobs.append((inst, mp))
+    return jobs
+
+
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False) -> list:
+    reps = 3 if quick else 7
+    cycles = 100 if quick else 400
+    rng = np.random.default_rng(11)
+    ms, mc = _markets()
+
+    # -------- single-row round-trips (acquire + release), per-call cost
+    def _cycle(m):
+        rng2 = np.random.default_rng(5)
+        rows = []
+        for i in range(cycles):
+            inst = m.pool[int(rng2.integers(len(m.pool)))]
+            t = float(rng2.integers(0, 5 * 24 * 60)) * MINUTE
+            mp = float(m.price(inst, t) * rng2.uniform(0.9, 1.2))
+            rows.append(m.ledger.acquire_row(inst, mp, t) + (t,))
+        for row, _, t in rows:
+            m.ledger.release_row(row, t + 1800.0, True)
+
+    scalar_s = _best_of(lambda: _cycle(ms), reps)
+    columnar_s = _best_of(lambda: _cycle(mc), reps)
+    if ms.billed != mc.billed or ms.refunded != mc.refunded:
+        raise AssertionError(
+            f"ledger totals drifted: scalar=({ms.billed}, {ms.refunded}) "
+            f"columnar=({mc.billed}, {mc.refunded})")
+
+    # -------- one deploy burst: scalar loop vs batched crossing search
+    ms, mc = _markets()
+    t = 45 * MINUTE
+    jobs = _burst_jobs(mc, t, rng)
+    want = [ms.ledger.acquire_row(inst, mp, t) for inst, mp in jobs]
+    got = acquire_batch_multi([(mc, inst, mp, t) for inst, mp in jobs])
+    if got != want:
+        raise AssertionError("batched crossing search drifted from scalar")
+
+    def _scalar_burst():
+        for inst, mp in jobs:
+            ms.ledger.acquire_row(inst, mp, t)
+
+    def _batched_burst():
+        acquire_batch_multi([(mc, inst, mp, t) for inst, mp in jobs])
+
+    scalar_burst = _best_of(_scalar_burst, reps)
+    batched_burst = _best_of(_batched_burst, reps)
+
+    n = cycles * 2      # acquire + release per cycle
+    return [
+        ("ledger_scalar_roundtrip", scalar_s / n * 1e6, "us/acq+rel"),
+        ("ledger_columnar_roundtrip", columnar_s / n * 1e6, "us/acq+rel"),
+        (f"ledger_scalar_burst{BURST}", scalar_burst / BURST * 1e6,
+         "us/bid"),
+        (f"ledger_batched_burst{BURST}", batched_burst / BURST * 1e6,
+         "us/bid"),
+        ("ledger_burst_speedup", 0.0,
+         f"{scalar_burst / max(batched_burst, 1e-12):.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(quick=True):
+        print(f"{name},{us:.2f},{derived}")

@@ -231,7 +231,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,fig12,"
-                         "asha,roofline,train,soa_kernel")
+                         "asha,roofline,train,soa_kernel,ledger")
     ap.add_argument("--json", nargs="?", const="BENCH_simcore.json",
                     default=None, metavar="PATH",
                     help="write a JSON benchmark record (default "
@@ -263,7 +263,7 @@ def main() -> None:
 
     from benchmarks import (asha_compare, fig6_profiling, fig7_cost_perf,
                             fig8_theta, fig9_refund, fig10_revpred,
-                            fig11_earlycurve, fig12_checkpoint,
+                            fig11_earlycurve, fig12_checkpoint, ledger,
                             roofline_report, soa_kernel, training_trials)
     from repro.core.trial import WORKLOADS
 
@@ -286,6 +286,7 @@ def main() -> None:
             workloads=quick_w[:1] if args.quick else None),
         "roofline": lambda: roofline_report.run(),
         "soa_kernel": lambda: soa_kernel.run(quick=args.quick),
+        "ledger": lambda: ledger.run(quick=args.quick),
         "train": lambda: training_trials.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(suite)

@@ -27,7 +27,12 @@ import copy
 import csv
 import dataclasses
 import io
+import itertools
+import math
+import os
+import weakref
 import zlib
+from datetime import datetime, timezone
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -240,9 +245,45 @@ _BLOCKMAX_CACHE: Dict[int, tuple] = {}
 _INDEX_CACHE_MAX = 512     # entries per cache (~trace count, not bytes)
 
 
+# Traces referenced by a live columnar ledger keep their derived indices
+# resident: a sweep's markets re-query them on every deploy and billing
+# integral, and a FIFO eviction mid-run would silently rebuild the index
+# each round.  id(tr) -> [tr, refcount]; the strong reference pins the id
+# for the entry's lifetime, and a ledger's finalizer drops its count.
+_LIVE_TRACES: Dict[int, list] = {}
+
+
+def _retain_traces(traces) -> list:
+    ids = []
+    for tr in traces:
+        k = id(tr)
+        ent = _LIVE_TRACES.get(k)
+        if ent is None:
+            _LIVE_TRACES[k] = [tr, 1]
+        else:
+            ent[1] += 1
+        ids.append(k)
+    return ids
+
+
+def _release_traces(ids) -> None:
+    for k in ids:
+        ent = _LIVE_TRACES.get(k)
+        if ent is not None:
+            ent[1] -= 1
+            if ent[1] <= 0:
+                del _LIVE_TRACES[k]
+
+
 def _cache_put(cache: Dict[int, tuple], key: int, val: tuple) -> None:
     if len(cache) >= _INDEX_CACHE_MAX:
-        cache.pop(next(iter(cache)))     # FIFO evict (insertion-ordered)
+        # FIFO over evictable entries only: an index whose trace backs a
+        # live columnar ledger is mid-sweep hot.  If every entry is live,
+        # grow past the cap rather than thrash.
+        for k in cache:
+            if k not in _LIVE_TRACES:
+                del cache[k]
+                break
     cache[key] = val
 
 
@@ -299,29 +340,46 @@ def clear_trace_caches() -> None:
     _PRICE_LIST_CACHE.clear()
 
 
+def _parse_ts(ts) -> float:
+    """Timestamp -> epoch seconds.  Accepts numeric values and ISO-8601
+    (``2020-01-01T00:00:00``, optional fraction/offset, trailing ``Z``)."""
+    try:
+        return float(ts)
+    except (TypeError, ValueError):
+        pass
+    dt = datetime.fromisoformat(str(ts).strip().replace("Z", "+00:00"))
+    if dt.tzinfo is None:
+        dt = dt.replace(tzinfo=timezone.utc)
+    return dt.timestamp()
+
+
 def load_csv_traces(text: str, pool: List[InstanceType], minutes: int):
     """Kaggle `aws-spot-pricing-market` schema: Timestamp, InstanceType,
-    ..., SpotPrice.  Interpolated to a fixed 1-minute grid (paper §IV-A1)."""
+    ..., SpotPrice.  Interpolated to a fixed 1-minute grid (paper §IV-A1).
+
+    Samples are sorted by *parsed* timestamp (string sort breaks on
+    epoch-second dumps) and interpolated on the real time axis: the dumps
+    record one row per price *change*, so sample index is not proportional
+    to time, and interpolating in index space lands every price change at
+    the wrong simulated minute."""
     by_inst: Dict[str, List] = {}
     reader = csv.DictReader(io.StringIO(text))
     for row in reader:
         name = row.get("InstanceType") or row.get("instance_type")
         price = float(row.get("SpotPrice") or row.get("spot_price"))
         ts = row.get("Timestamp") or row.get("timestamp")
-        by_inst.setdefault(name, []).append((ts, price))
+        by_inst.setdefault(name, []).append((_parse_ts(ts), price))
     traces = {}
     for inst in pool:
         if inst.name not in by_inst:
             continue
         rows = sorted(by_inst[inst.name])
+        times = np.array([t for t, _ in rows], np.float64)
         prices = np.array([p for _, p in rows], np.float32)
-        # interpolate onto the 1-minute grid: the samples are unevenly spaced
-        # in the dump, and integer truncation of the index (the old behavior)
-        # snapped every grid point to the nearest-below sample, shifting each
-        # price change up to a full sample interval early
-        idx = np.linspace(0, len(prices) - 1, minutes)
-        traces[inst.name] = np.interp(
-            idx, np.arange(len(prices)), prices).astype(np.float32)
+        # map the simulated minute grid linearly onto the dump's real time
+        # span; a uniformly sampled dump reduces to the old index grid
+        grid = np.linspace(times[0], times[-1], minutes)
+        traces[inst.name] = np.interp(grid, times, prices).astype(np.float32)
     return traces
 
 
@@ -335,12 +393,249 @@ class Allocation:
     released: bool = False
 
 
+class _RecRef:
+    """Deferred billing record: resolved against its ledger row on read."""
+
+    __slots__ = ("ledger", "row")
+
+    def __init__(self, ledger, row: int):
+        self.ledger = ledger
+        self.row = row
+
+    def record(self) -> dict:
+        return self.ledger.record(self.row)
+
+
+class ScalarLedger:
+    """Reference ledger: one ``Allocation`` object per row, eager records.
+
+    Retained behind ``SpotMarket(ledger="scalar")`` (or the
+    ``REPRO_SCALAR_LEDGER=1`` environment flag) as the equivalence pin for
+    the columnar fast path."""
+
+    kind = "scalar"
+
+    def __init__(self, market: "SpotMarket"):
+        self.market = market
+        self.allocations: List[Allocation] = []
+        self._records: List[Optional[dict]] = []
+
+    def acquire_row(self, inst: InstanceType, max_price: float, t: float):
+        m = self.market
+        cross = m._first_crossing(inst.name, int(t / MINUTE), max_price)
+        t_rev = cross * MINUTE if cross is not None else None
+        if t_rev is not None and t_rev <= t:
+            t_rev = t + MINUTE  # acquired into an over-price window
+        row = len(self.allocations)
+        self.allocations.append(Allocation(row, inst, max_price, t, t_rev))
+        self._records.append(None)
+        return row, (math.inf if t_rev is None else t_rev)
+
+    def release_row(self, row: int, t: float, revoked: bool):
+        a = self.allocations[row]
+        assert not a.released
+        a.released = True
+        m = self.market
+        held = t - a.t_start
+        cost = m._integral(a.inst, a.t_start, t)
+        refund = 0.0
+        if revoked and m.refund_enabled and held < HOUR:
+            refund = cost  # first instance hour fully refunded on revocation
+        m.billed += cost - refund
+        m.refunded += refund
+        self._records[row] = {"inst": a.inst.name, "held_s": held,
+                              "cost": cost, "refund": refund,
+                              "revoked": revoked}
+        return cost, refund
+
+    def record(self, row: int) -> dict:
+        return self._records[row]
+
+    def view(self, row: int) -> Allocation:
+        return self.allocations[row]
+
+    def views(self) -> List[Allocation]:
+        return self.allocations
+
+
+class ColumnarLedger:
+    """Flat-column allocation ledger (the default).
+
+    One row per allocation across parallel numpy columns instead of one
+    ``Allocation`` object per call.  Billing stays on the scalar
+    ``_integral`` prefix-sum path (bit-identical dollars); crossing
+    searches batch across a deploy burst (``acquire_batch_multi``); release
+    records materialize lazily through ``record``/``_RecRef`` only when an
+    event log is actually read."""
+
+    kind = "columnar"
+
+    _COLS = ("inst_idx", "max_price", "t_start", "t_revoke", "t_end",
+             "released", "revoked", "cost", "refund")
+
+    def __init__(self, market: "SpotMarket"):
+        self.market = market
+        self.n = 0
+        cap = 64
+        self.inst_idx = np.zeros(cap, np.int32)
+        self.max_price = np.zeros(cap)
+        self.t_start = np.zeros(cap)
+        self.t_revoke = np.full(cap, np.inf)   # inf = never within horizon
+        self.t_end = np.zeros(cap)
+        self.released = np.zeros(cap, bool)
+        self.revoked = np.zeros(cap, bool)
+        self.cost = np.zeros(cap)
+        self.refund = np.zeros(cap)
+        self._pool_index = {i.name: k for k, i in enumerate(market.pool)}
+        ids = _retain_traces(market.traces.values())
+        self._finalizer = weakref.finalize(self, _release_traces, ids)
+
+    def _grow(self) -> None:
+        for name in self._COLS:
+            col = getattr(self, name)
+            ext = np.full(len(col), np.inf) if name == "t_revoke" else \
+                np.zeros(len(col), col.dtype)
+            setattr(self, name, np.concatenate([col, ext]))
+
+    def _begin(self, inst: InstanceType, max_price: float, t: float) -> int:
+        row = self.n
+        if row == len(self.t_start):
+            self._grow()
+        self.inst_idx[row] = self._pool_index[inst.name]
+        self.max_price[row] = max_price
+        self.t_start[row] = t
+        self.n = row + 1
+        return row
+
+    def acquire_row(self, inst: InstanceType, max_price: float, t: float):
+        row = self._begin(inst, max_price, t)
+        m = self.market
+        cross = m._first_crossing(inst.name, int(t / MINUTE), max_price)
+        t_rev = math.inf if cross is None else cross * MINUTE
+        if t_rev <= t:
+            t_rev = t + MINUTE  # acquired into an over-price window
+        self.t_revoke[row] = t_rev
+        return row, t_rev
+
+    def release_row(self, row: int, t: float, revoked: bool):
+        assert not self.released[row]
+        m = self.market
+        ts = float(self.t_start[row])
+        inst = m.pool[self.inst_idx[row]]
+        cost = m._integral(inst, ts, t)
+        refund = 0.0
+        if revoked and m.refund_enabled and t - ts < HOUR:
+            refund = cost  # first instance hour fully refunded on revocation
+        m.billed += cost - refund
+        m.refunded += refund
+        self.released[row] = True
+        self.revoked[row] = revoked
+        self.t_end[row] = t
+        self.cost[row] = cost
+        self.refund[row] = refund
+        return cost, refund
+
+    def record(self, row: int) -> dict:
+        return {"inst": self.market.pool[self.inst_idx[row]].name,
+                "held_s": float(self.t_end[row]) - float(self.t_start[row]),
+                "cost": float(self.cost[row]),
+                "refund": float(self.refund[row]),
+                "revoked": bool(self.revoked[row])}
+
+    def view(self, row: int) -> Allocation:
+        t_rev = float(self.t_revoke[row])
+        return Allocation(row, self.market.pool[self.inst_idx[row]],
+                          float(self.max_price[row]),
+                          float(self.t_start[row]),
+                          None if t_rev == math.inf else t_rev,
+                          bool(self.released[row]))
+
+    def views(self) -> List[Allocation]:
+        return [self.view(r) for r in range(self.n)]
+
+
+def _crossing_batch(tr: np.ndarray, start_i: int, bids: np.ndarray) -> np.ndarray:
+    """Vectorized ``_first_crossing`` for many bids sharing (trace, start).
+
+    Returns int64 minute indices, -1 for "never within horizon".
+    Comparisons run in the trace dtype (float32), matching the scalar
+    path's NEP-50 treatment of a Python-float bid, so every row is
+    bit-identical to ``np.nonzero(tr[start_i:] > bid)[0][0]``."""
+    n = len(bids)
+    out = np.full(n, -1, np.int64)
+    if start_i >= len(tr):
+        return out
+    bids = bids.astype(tr.dtype)
+    kb = start_i // _CROSS_BLOCK
+    hit0 = tr[start_i:(kb + 1) * _CROSS_BLOCK] > bids[:, None]
+    any0 = hit0.any(axis=1)
+    if any0.any():
+        out[any0] = start_i + hit0[any0].argmax(axis=1)
+    rest = np.nonzero(~any0)[0]
+    if not len(rest):
+        return out
+    tail = _shared_blockmax(tr)[kb + 1:]
+    if len(tail):
+        over = tail > bids[rest, None]
+        has = over.any(axis=1)
+        if has.any():
+            rows = rest[has]
+            b0 = kb + 1 + over[has].argmax(axis=1)
+            for blk in np.unique(b0):           # one scan per distinct block
+                seg = tr[blk * _CROSS_BLOCK:(blk + 1) * _CROSS_BLOCK]
+                sel = rows[b0 == blk]
+                out[sel] = blk * _CROSS_BLOCK + (
+                    seg > bids[sel, None]).argmax(axis=1)
+    return out
+
+
+def acquire_batch_multi(jobs) -> list:
+    """Acquire many ``(market, inst, max_price, t)`` allocations at once.
+
+    Columnar-ledger jobs are grouped by ``(trace, start minute)`` — a
+    deploy burst shares the minute, and replicas of one market seed share
+    memoized traces, so one segmented scan answers the whole batch — while
+    row ids are still assigned per market in job order, identical to
+    per-call acquisition.  Scalar-ledger jobs keep the per-call search.
+    Returns ``[(row, t_revoke), ...]`` with ``math.inf`` for "never"."""
+    out: list = [None] * len(jobs)
+    groups: Dict[tuple, list] = {}
+    for j, (market, inst, max_price, t) in enumerate(jobs):
+        led = market.ledger
+        if led.kind != "columnar":
+            out[j] = led.acquire_row(inst, max_price, t)
+            continue
+        row = led._begin(inst, max_price, t)
+        out[j] = row
+        tr = market.traces[inst.name]
+        g = groups.setdefault((id(tr), int(t / MINUTE)), [tr, [], []])
+        g[1].append(j)
+        g[2].append(max_price)
+    for (_, start_i), (tr, idxs, bids) in groups.items():
+        if len(idxs) == 1:
+            market, inst, max_price, _t = jobs[idxs[0]]
+            cross = market._first_crossing(inst.name, start_i, max_price)
+            crosses = [-1 if cross is None else cross]
+        else:
+            crosses = _crossing_batch(
+                tr, start_i, np.asarray(bids, np.float64)).tolist()
+        for j, c in zip(idxs, crosses):
+            market, t = jobs[j][0], jobs[j][3]
+            t_rev = math.inf if c < 0 else c * MINUTE
+            if t_rev <= t:
+                t_rev = t + MINUTE
+            market.ledger.t_revoke[out[j]] = t_rev
+            out[j] = (out[j], t_rev)
+    return out
+
+
 class SpotMarket:
     """Price oracle + allocation ledger + billing (with first-hour refund)."""
 
     def __init__(self, pool: Optional[List[InstanceType]] = None, days: float = 12.0,
                  seed: int = 0, notice_s: float = 120.0, refund_enabled: bool = True,
-                 traces: Optional[Dict[str, np.ndarray]] = None):
+                 traces: Optional[Dict[str, np.ndarray]] = None,
+                 ledger: Optional[str] = None):
         self.pool = pool or list(DEFAULT_POOL)
         self.minutes = int(days * 1440)
         self.notice_s = notice_s
@@ -351,10 +646,21 @@ class SpotMarket:
         self._pool_price_memo: Optional[tuple] = None
         self._pool_avg_memo: Optional[tuple] = None
         self._pool_rows_memo: Optional[tuple] = None
-        self._next_id = 0
-        self.allocations: List[Allocation] = []
+        kind = ledger or ("scalar" if os.environ.get("REPRO_SCALAR_LEDGER")
+                          else "columnar")
+        if kind == "columnar":
+            self.ledger = ColumnarLedger(self)
+        elif kind == "scalar":
+            self.ledger = ScalarLedger(self)
+        else:
+            raise ValueError(f"unknown ledger kind: {kind!r}")
         self.billed = 0.0
         self.refunded = 0.0
+
+    @property
+    def allocations(self) -> List[Allocation]:
+        """Compat view of the ledger rows (scalar: the live objects)."""
+        return self.ledger.views()
 
     # per-trace indices live in the module-level caches: replicas of the
     # same market seed (trace memo hit) share one prefix/blockmax build
@@ -453,7 +759,10 @@ class SpotMarket:
             lo = max(0, hi - int(window_s / MINUTE))
             P = self._price_prefix(inst.name)
             if len(_AVG_CACHE) >= _AVG_CACHE_MAX:
-                _AVG_CACHE.clear()
+                # evict the oldest half (insertion order) — a wholesale
+                # clear dumps every live sweep's recent windows mid-run
+                for k in list(itertools.islice(_AVG_CACHE, _AVG_CACHE_MAX // 2)):
+                    del _AVG_CACHE[k]
             ent = _AVG_CACHE[key] = (tr, (P[hi] - P[lo]) / (hi - lo))
         return ent[1]
 
@@ -462,20 +771,16 @@ class SpotMarket:
 
     # ----------------------------------------------------------- allocation
     def acquire(self, inst: InstanceType, max_price: float, t: float) -> Allocation:
-        start_i = int(t / MINUTE)
-        cross = self._first_crossing(inst.name, start_i, max_price)
-        t_rev = cross * MINUTE if cross is not None else None
-        if t_rev is not None and t_rev <= t:
-            t_rev = t + MINUTE  # acquired into an over-price window
-        a = Allocation(self._next_id, inst, max_price, t, t_rev)
-        self._next_id += 1
-        self.allocations.append(a)
-        return a
+        """Compat wrapper over ``ledger.acquire_row`` returning a row view."""
+        row, _ = self.ledger.acquire_row(inst, max_price, t)
+        return self.ledger.view(row)
 
     def notice_time(self, a: Allocation) -> Optional[float]:
         if a.t_revoke is None:
             return None
-        return a.t_revoke - self.notice_s
+        # clamped: an over-price acquire bumps t_revoke to t + MINUTE, and
+        # an unclamped notice would land before the allocation even starts
+        return max(a.t_start, a.t_revoke - self.notice_s)
 
     # -------------------------------------------------------------- billing
     def _integral(self, inst: InstanceType, t0: float, t1: float) -> float:
@@ -502,14 +807,6 @@ class SpotMarket:
 
     def release(self, a: Allocation, t: float, revoked: bool) -> dict:
         """End an allocation at time t.  Returns billing record."""
-        assert not a.released
-        a.released = True
-        held = t - a.t_start
-        cost = self._integral(a.inst, a.t_start, t)
-        refund = 0.0
-        if revoked and self.refund_enabled and held < HOUR:
-            refund = cost  # first instance hour fully refunded on revocation
-        self.billed += cost - refund
-        self.refunded += refund
-        return {"inst": a.inst.name, "held_s": held, "cost": cost,
-                "refund": refund, "revoked": revoked}
+        self.ledger.release_row(a.alloc_id, t, revoked)
+        a.released = True    # keep detached columnar views consistent
+        return self.ledger.record(a.alloc_id)

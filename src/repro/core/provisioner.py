@@ -23,7 +23,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.market import HOUR, MINUTE, InstanceType, SpotMarket
+from repro.core.market import (HOUR, MINUTE, InstanceType, SpotMarket,
+                               acquire_batch_multi)
 from repro.core.trial import TrialSpec
 
 
@@ -261,7 +262,7 @@ class Provisioner:
         return self.choose(t, trial, cands, self.predict_candidates(t, cands))
 
 
-def best_fused_multi(jobs: list) -> list:
+def best_fused_multi(jobs: list, acquire: bool = False):
     """One vectorized Eq.-2 solve over many deploys — possibly spanning many
     replicas' provisioners — in engine order.
 
@@ -283,7 +284,22 @@ def best_fused_multi(jobs: list) -> list:
     Only valid for ``fused_supported()`` provisioners and jobs without
     exclusions (callers route excluded trials through ``best_fused``).
     Mixed pool sizes drop to the scalar loop — equally exact, just unfused.
+
+    With ``acquire=True`` the winning bids are answered immediately against
+    each market's ledger via :func:`acquire_batch_multi` — one segmented
+    crossing search per shared ``(trace, minute)`` group — and the return
+    becomes ``(choices, [(row, t_revoke), ...])``, both aligned with
+    ``jobs``.
     """
+    out = _fused_choices(jobs)
+    if not acquire:
+        return out
+    rows = acquire_batch_multi([(prov.market, c.inst, c.max_price, t)
+                                for (prov, t, spec), c in zip(jobs, out)])
+    return out, rows
+
+
+def _fused_choices(jobs: list) -> list:
     n = len(jobs)
     if n < 4:
         return [prov.best_fused(t, spec) for prov, t, spec in jobs]

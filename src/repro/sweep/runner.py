@@ -100,7 +100,8 @@ class SweepRunner:
         shared_rp: Dict[tuple, object] = {}
         tuners = []
         for spec in specs:
-            market = SpotMarket(days=spec.days, seed=spec.market_seed)
+            market = SpotMarket(days=spec.days, seed=spec.market_seed,
+                                ledger=spec.ledger or None)
             rp_key = (spec.market_key(), spec.revpred, spec.engine_seed)
             rp = shared_rp.get(rp_key)
             if rp is None:
@@ -241,7 +242,8 @@ class SweepRunner:
         for spec in specs:
             if cold:
                 clear_shared_caches()
-            market = SpotMarket(days=spec.days, seed=spec.market_seed)
+            market = SpotMarket(days=spec.days, seed=spec.market_seed,
+                                ledger=spec.ledger or None)
             backend = make_backend(spec.backend, pool=market.pool)
             rp = build_revpred(spec, market, train_minutes=self.train_minutes,
                                epochs=self.revpred_epochs,

@@ -85,7 +85,12 @@ def classify_rows(t: np.ndarray, t_revoke: np.ndarray,
     Pure (arrays in, arrays out): the property test pins it against a
     row-at-a-time replay of the chain's branch conditions."""
     has_rev = np.isfinite(t_revoke)
-    notice_due = has_rev & ~notice_handled & (t >= t_revoke - notice_s)
+    # notice boundary clamped to the allocation start (over-price acquires
+    # bump t_revoke to t_start + 60s; unclamped, the notice would predate
+    # the allocation).  For touched rows t >= t_start always holds, so the
+    # clamp never changes which rows fire — only the scheduled boundary.
+    notice_due = has_rev & ~notice_handled \
+        & (t >= np.maximum(t_start, t_revoke - notice_s))
     cls = np.zeros(len(t), np.int8)
     cls[(t - t_start) >= HOUR] = 4
     cls[pause_requested] = 3
@@ -141,6 +146,7 @@ class SoaSweep:
         self.tick = np.array([e.cfg.tick_s for e in self.engines])
         self.k_now = np.zeros(R, np.int64)
         self.max_sim = np.array([e.cfg.max_sim_s for e in self.engines])
+        self.notice_arr = np.array([e.cfg.notice_s for e in self.engines])
         self.horizon = np.array([e.market.horizon_s() for e in self.engines])
         self.k_guard = np.array(
             [min(math.floor(e.cfg.max_sim_s / e.cfg.tick_s) + 1,
@@ -416,8 +422,8 @@ class SoaSweep:
                 st = sts[j]
                 eng = engines[reps_l[j]]
                 eng.prov.perf.update_many(
-                    st.alloc.inst, st.spec,
-                    eng.backend.noisy_step_times(st.spec, st.alloc.inst,
+                    st.a_inst, st.spec,
+                    eng.backend.noisy_step_times(st.spec, st.a_inst,
                                                  k0l[j], k1l[j], tickl[j],
                                                  base=sptl[j]))
             return
@@ -441,7 +447,7 @@ class SoaSweep:
             for o, j in enumerate(lidx_l):
                 st = sts[j]
                 v = engines[reps_l[j]].backend.noisy_step_times(
-                    st.spec, st.alloc.inst, k0l[j], k1l[j], tickl[j],
+                    st.spec, st.a_inst, k0l[j], k1l[j], tickl[j],
                     base=sptl[j])
                 pad[o, :len(v)] = v
         m0 = np.zeros(n_live)
@@ -451,7 +457,7 @@ class SoaSweep:
         for o, j in enumerate(lidx_l):
             st = sts[j]
             perf = engines[reps_l[j]].prov.perf
-            key = (st.alloc.inst.name, st.key)
+            key = (st.a_inst.name, st.key)
             keys.append(key)
             perfs.append(perf)
             v = perf._m.get(key)
@@ -503,13 +509,11 @@ class SoaSweep:
             return
         reps = self.row_rep[touched]
         t = self.t[reps]
-        notice_s = np.array([self.engines[r].cfg.notice_s
-                             for r in reps.tolist()])
+        notice_s = self.notice_arr[reps]
         trev, nh, tstart, steps, target, stopped, pause = (
             np.array(c) for c in zip(
-                *[(math.inf if st.alloc.t_revoke is None
-                   else st.alloc.t_revoke,
-                   st.notice_handled, st.alloc.t_start, st.steps,
+                *[(st.a_t_revoke,
+                   st.notice_handled, st.a_t_start, st.steps,
                    st.target_steps, st.stopped, st.pause_requested)
                   for st in sts]))
         nh = nh.astype(bool)
@@ -584,7 +588,7 @@ class SoaSweep:
                 if notice_due[j]:
                     eng._checkpoint(st, deadline_s=cfg.notice_s)
                     st.notice_handled = True
-                    eng.events.append((te, "notice", st.spec.key))
+                    eng._events.append((te, "notice", st.spec.key))
                 c = int(cls[j])
                 if c == 0:
                     continue
@@ -619,7 +623,7 @@ class SoaSweep:
                     eng._release(st, revoked=False)
                     st.status = Status.FINISHED
                     st.finish_time = te + eng._ckpt_time(st)
-                    eng.events.append((te, "finish", st.spec.key, st.steps))
+                    eng._events.append((te, "finish", st.spec.key, st.steps))
                 elif c == 3:              # scheduler pause
                     eng._checkpoint(st)
                     eng._release(st, revoked=False)
@@ -630,7 +634,7 @@ class SoaSweep:
                     eng._checkpoint(st)
                     eng._release(st, revoked=False)
                     st.status = Status.WAITING
-                    eng.events.append((te, "rotate", st.spec.key))
+                    eng._events.append((te, "rotate", st.spec.key))
                     if st.pause_requested:
                         eng._park(st)
                     else:
@@ -684,16 +688,17 @@ class SoaSweep:
         cfg = eng.cfg
         for step, val in pts:
             eng._dispatch(MetricReported(t, st.key, step, val), st)
-        a = st.alloc
-        # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26)
-        if a.t_revoke is not None and not st.notice_handled \
-                and t >= a.t_revoke - cfg.notice_s:
+        trev = st.a_t_revoke            # inf = never, so no None checks
+        # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26); the
+        # clamp mirrors the engine chain (t >= t_start while running)
+        if not st.notice_handled \
+                and t >= max(st.a_t_start, trev - cfg.notice_s):
             eng._checkpoint(st, deadline_s=cfg.notice_s)
             st.notice_handled = True
-            eng.events.append((t, "notice", st.spec.key))
-            eng._dispatch(RevocationNotice(t, st.key, a.t_revoke), st)
+            eng._events.append((t, "notice", st.spec.key))
+            eng._dispatch(RevocationNotice(t, st.key, trev), st)
         # revocation fires
-        if a.t_revoke is not None and t >= a.t_revoke:
+        if t >= trev:
             lost = st.steps - st.ckpt_steps
             st.lost_steps += lost
             st.steps = st.ckpt_steps      # roll back to checkpoint
@@ -719,7 +724,7 @@ class SoaSweep:
             eng._release(st, revoked=False)
             st.status = Status.FINISHED
             st.finish_time = t + eng._ckpt_time(st)
-            eng.events.append((t, "finish", st.spec.key, st.steps))
+            eng._events.append((t, "finish", st.spec.key, st.steps))
             eng._dispatch(
                 TrialFinished(t, st.key, st.steps, st.stopped), st)
             self.next_k[i] = _BIG
@@ -732,12 +737,12 @@ class SoaSweep:
             self.next_k[i] = _BIG
             return
         # (3) one-hour proactive rotation (l.31-34)
-        if t - a.t_start >= HOUR:
+        if t - st.a_t_start >= HOUR:
             eng._checkpoint(st)
-            held = t - a.t_start
+            held = t - st.a_t_start
             eng._release(st, revoked=False)
             st.status = Status.WAITING
-            eng.events.append((t, "rotate", st.spec.key))
+            eng._events.append((t, "rotate", st.spec.key))
             d = eng._dispatch(HourRotation(t, st.key, held), st)
             if d.kind == DecisionKind.PAUSE or st.pause_requested:
                 eng._park(st)
@@ -804,10 +809,15 @@ class SoaSweep:
                                          exclude=st.exclude or None))
                 for st in got]))
         if fused:
-            choices = best_fused_multi(
-                [(eng.prov, eng.t, st.spec) for eng, _, st in fused])
-            for (eng, r, st), choice in zip(fused, choices):
-                eng._deploy_chosen(st, choice)
+            # acquire=True feeds the winning bids of the whole cross-replica
+            # burst straight into the columnar crossing search — one
+            # segmented scan per shared (trace, minute) group
+            choices, arows = best_fused_multi(
+                [(eng.prov, eng.t, st.spec) for eng, _, st in fused],
+                acquire=True)
+            for (eng, r, st), choice, (row, t_rev) in zip(fused, choices,
+                                                          arows):
+                eng._deploy_row(st, choice, row, t_rev)
                 deployed.append(self._row_of(st))
             for eng, r, _ in fused:
                 if eng._pending_deploy:
@@ -850,18 +860,20 @@ class SoaSweep:
         reps = self.row_rep[idx]
         tick = self.tick[reps]
         kn = self.k_now[reps]
-        t_start = np.array([st.alloc.t_start for st in sts])
-        t_rev = np.array([math.inf if st.alloc.t_revoke is None
-                          else st.alloc.t_revoke for st in sts])
+        t_start = np.array([st.a_t_start for st in sts])
+        t_rev = np.array([st.a_t_revoke for st in sts])
         handled = np.array([st.notice_handled for st in sts], bool)
-        notice = np.array([self.engines[r].cfg.notice_s for r in reps])
+        notice = self.notice_arr[reps]
         ready = np.array([st.ready_at for st in sts])
         last_t = np.array([st._last_t for st in sts])
         steps = np.array([st.steps for st in sts])
         target = np.array([st.target_steps for st in sts])
         spt = np.array([st._spt for st in sts])
         cand = t_start + HOUR                         # 1-hour rotation
-        b = np.where(handled, t_rev, t_rev - notice)  # notice-or-revoke
+        # notice-or-revoke, notice clamped to the allocation start (engine
+        # _next_tick mirror)
+        b = np.where(handled, t_rev,
+                     np.maximum(t_start, t_rev - notice))
         cand = np.where(b < cand, b, cand)
         start = np.where(ready > last_t, ready, last_t)
         b = start + (target - steps) * spt            # finish

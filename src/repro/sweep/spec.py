@@ -68,6 +68,11 @@ class ScenarioSpec:
     # ("qwen1.5-0.5b" | "mamba2-130m" | "whisper-base", with or without the
     # "train-" prefix)
     backend: str = "sim"
+    # allocation-ledger layout: "" = the market default (columnar unless
+    # REPRO_SCALAR_LEDGER is set); "scalar" | "columnar" force one.  The
+    # two are pinned bit-exact by compare_ledger_modes; scalar stays the
+    # reference implementation
+    ledger: str = ""
     tag: str = ""                        # free-form grouping label
 
     def workload_obj(self) -> Workload:
@@ -132,7 +137,7 @@ class ScenarioSpec:
 
     def market_key(self) -> tuple:
         """Replicas agreeing on this key can share one trace set."""
-        return (self.days, self.market_seed)
+        return (self.days, self.market_seed, self.ledger)
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)

@@ -59,7 +59,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.backends.base import TrialBackend
-from repro.core.market import HOUR, Allocation, SpotMarket
+from repro.core.market import (HOUR, InstanceType, SpotMarket, _RecRef,
+                               acquire_batch_multi)
 from repro.core.provisioner import Choice, PerfModel, Provisioner
 from repro.core.trial import TrialSpec
 from repro.tuner.events import (HourRotation, MetricReported, RevocationNotice,
@@ -81,7 +82,12 @@ class TrialState:
     steps: float = 0.0
     ckpt_steps: float = 0.0
     status: Status = Status.WAITING
-    alloc: Optional[Allocation] = None
+    # live allocation as a ledger row handle plus hot-column mirrors (the
+    # tick/boundary chains read these instead of chasing an object)
+    alloc_row: int = -1
+    a_inst: Optional[InstanceType] = None
+    a_t_start: float = 0.0
+    a_t_revoke: float = math.inf     # inf = never within horizon
     choice: Optional[Choice] = None
     ready_at: float = 0.0
     notice_handled: bool = False
@@ -210,7 +216,9 @@ class ExecutionEngine:
         self.states: List[TrialState] = []
         self._by_key: Dict[str, TrialState] = {}
         self._active: List[TrialState] = []
-        self.events: List[tuple] = []
+        self._ledger = market.ledger
+        self._events: List[tuple] = []
+        self._ev_mat = 0         # prefix of _events already materialized
         self.t = 0.0
         # fast path: min-heap of (tick index, seq, trial) boundary entries
         # with lazy invalidation (stale when trial._next_k moved on)
@@ -222,6 +230,26 @@ class ExecutionEngine:
         self._has_table = False
         self._started_inert = False
         self._flush_k: Optional[int] = None   # armed deploy-window flush tick
+
+    @property
+    def events(self) -> List[tuple]:
+        """Event log with deferred billing records materialized on read.
+
+        Releases append a ``_RecRef`` row handle instead of building the
+        record dict in the hot loop; the first read of the log resolves the
+        new suffix in place (a materialized prefix is never re-resolved, so
+        repeated reads stay O(new events))."""
+        ev = self._events
+        j = self._ev_mat
+        n = len(ev)
+        while j < n:
+            e = ev[j]
+            p = e[-1]
+            if type(p) is _RecRef:
+                ev[j] = e[:-1] + (p.record(),)
+            j += 1
+        self._ev_mat = n
+        return ev
 
     # ------------------------------------------------------------- trials
     def bind(self, scheduler: Scheduler) -> None:
@@ -307,24 +335,38 @@ class ExecutionEngine:
             st.ckpt_steps = st.steps
         st.ckpt_seconds += self._ckpt_time(st)
 
-    def _release(self, st: TrialState, revoked: bool) -> dict:
-        rec = self.market.release(st.alloc, self.t, revoked=revoked)
+    def _release(self, st: TrialState, revoked: bool) -> None:
+        row = st.alloc_row
+        cost, refund = self._ledger.release_row(row, self.t, revoked)
         steps_this_alloc = st.ckpt_steps - st.alloc_start_steps
-        st.billed_cost += rec["cost"] - rec["refund"]
-        if rec["refund"] > 0:
+        st.billed_cost += cost - refund
+        if refund > 0:
             st.free_steps += max(steps_this_alloc, 0.0)
-        self.events.append((self.t, "release", st.spec.key, rec))
-        st.alloc = None
+        self._events.append((self.t, "release", st.spec.key,
+                             _RecRef(self._ledger, row)))
+        st.alloc_row = -1
+        st.a_inst = None
+        st.a_t_revoke = math.inf
         st.choice = None
         st.notice_handled = False
-        return rec
 
     def _deploy_chosen(self, st: TrialState, choice: Choice):
         """Complete a deployment whose Eq.-2 choice is already made."""
+        row, t_rev = self._ledger.acquire_row(choice.inst, choice.max_price,
+                                              self.t)
+        self._deploy_row(st, choice, row, t_rev)
+
+    def _deploy_row(self, st: TrialState, choice: Choice, row: int,
+                    t_rev: float):
+        """Finish a deployment whose ledger row was already acquired (the
+        batched deploy paths answer a whole burst's crossing searches in
+        one segmented scan before handing rows out)."""
         if st.exclude:
             st.exclude = set()
-        alloc = self.market.acquire(choice.inst, choice.max_price, self.t)
-        st.alloc = alloc
+        st.alloc_row = row
+        st.a_inst = choice.inst
+        st.a_t_start = self.t
+        st.a_t_revoke = t_rev
         st.choice = choice
         restore = self._ckpt_time(st) if st.steps > 0 else 0.0
         if self._backend_restores and st.steps > 0:
@@ -338,8 +380,8 @@ class ExecutionEngine:
         st.redeployments += 1
         st._last_t = self.t
         st._next_k = 0        # fresh allocation -> boundaries recomputed
-        st._spt = self.backend.base_step_time(st.spec, alloc.inst)
-        self.events.append((self.t, "deploy", st.spec.key, choice.inst.name,
+        st._spt = self.backend.base_step_time(st.spec, choice.inst)
+        self._events.append((self.t, "deploy", st.spec.key, choice.inst.name,
                             round(choice.max_price, 4), round(choice.p_revoke, 3)))
         if not self._started_inert:
             # table schedulers declare TrialStarted inert (no state change,
@@ -351,7 +393,7 @@ class ExecutionEngine:
     def _advance(self, st: TrialState, dt: float) -> List[tuple]:
         """Simulate ``dt`` seconds of compute; returns new (step, value)
         metric points (already appended to the trial's history)."""
-        inst = st.alloc.inst
+        inst = st.a_inst
         true_spt = self.backend.step_time(st.spec, inst)
         gained = dt / true_spt
         st.steps = min(st.steps + gained, st.target_steps)
@@ -391,7 +433,7 @@ class ExecutionEngine:
         k1 = round(t / tick_s)
         if k1 < k0:
             return []                             # still inside deploy/restore
-        inst = st.alloc.inst
+        inst = st.a_inst
         steps0 = st.steps
         st.steps = min(steps0 + (t - start) / st._spt, st.target_steps)
         obs = self.backend.noisy_step_times(st.spec, inst, k0, k1, tick_s,
@@ -469,7 +511,7 @@ class ExecutionEngine:
         trial is already checkpointed and off its allocation)."""
         st.pause_requested = False
         st.status = Status.PAUSED
-        self.events.append((self.t, "pause", st.spec.key))
+        self._events.append((self.t, "pause", st.spec.key))
 
     # ----------------------------------------------------------- main loop
     def run_until_idle(self):
@@ -511,9 +553,18 @@ class ExecutionEngine:
                     for st in waiting])
                 yield batch
                 assert batch.responses is not None, "unserviced ProvisionBatch"
-                for (st, cands), ps in zip(batch.items, batch.responses):
-                    choice = self.prov.choose(self.t, st.spec, cands, ps)
-                    self._deploy_chosen(st, choice)
+                # choices first (they read only the perf matrix and the
+                # minute-memoized market rows, which deploys never touch),
+                # then one batched acquire answers the burst's crossing
+                # searches in a single segmented scan
+                chosen = [(st, self.prov.choose(self.t, st.spec, cands, ps))
+                          for (st, cands), ps in zip(batch.items,
+                                                     batch.responses)]
+                rows = acquire_batch_multi(
+                    [(self.market, c.inst, c.max_price, self.t)
+                     for _, c in chosen])
+                for (st, choice), (row, t_rev) in zip(chosen, rows):
+                    self._deploy_row(st, choice, row, t_rev)
                     touched.append(st)
             self.t = self.t + cfg.tick_s if exact else self._next_tick(touched)
 
@@ -545,16 +596,17 @@ class ExecutionEngine:
             for step, val in new_points:
                 self._dispatch(MetricReported(self.t, st.key, step, val), st)
 
-            a = st.alloc
-            # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26)
-            if a.t_revoke is not None and not st.notice_handled \
-                    and self.t >= a.t_revoke - cfg.notice_s:
+            trev = st.a_t_revoke        # inf = never, so no None checks
+            # (1) revocation notice -> checkpoint (Algorithm 1 l.24-26).
+            # The notice clamp max(t_start, trev - notice_s) leaves this
+            # condition unchanged: t >= t_start always holds while running.
+            if not st.notice_handled and self.t >= trev - cfg.notice_s:
                 self._checkpoint(st, deadline_s=cfg.notice_s)
                 st.notice_handled = True
-                self.events.append((self.t, "notice", st.spec.key))
-                self._dispatch(RevocationNotice(self.t, st.key, a.t_revoke), st)
+                self._events.append((self.t, "notice", st.spec.key))
+                self._dispatch(RevocationNotice(self.t, st.key, trev), st)
             # revocation fires
-            if a.t_revoke is not None and self.t >= a.t_revoke:
+            if self.t >= trev:
                 lost = st.steps - st.ckpt_steps
                 st.lost_steps += lost
                 st.steps = st.ckpt_steps      # roll back to checkpoint
@@ -576,7 +628,7 @@ class ExecutionEngine:
                 self._release(st, revoked=False)
                 st.status = Status.FINISHED
                 st.finish_time = self.t + self._ckpt_time(st)
-                self.events.append((self.t, "finish", st.spec.key, st.steps))
+                self._events.append((self.t, "finish", st.spec.key, st.steps))
                 self._dispatch(
                     TrialFinished(self.t, st.key, st.steps, st.stopped), st)
                 continue
@@ -587,12 +639,12 @@ class ExecutionEngine:
                 self._park(st)
                 continue
             # (3) one-hour proactive rotation (l.31-34)
-            if self.t - a.t_start >= HOUR:
+            if self.t - st.a_t_start >= HOUR:
                 self._checkpoint(st)
-                held = self.t - a.t_start
+                held = self.t - st.a_t_start
                 self._release(st, revoked=False)
                 st.status = Status.WAITING
-                self.events.append((self.t, "rotate", st.spec.key))
+                self._events.append((self.t, "rotate", st.spec.key))
                 d = self._dispatch(HourRotation(self.t, st.key, held), st)
                 if d.kind == DecisionKind.PAUSE or st.pause_requested:
                     self._park(st)
@@ -601,13 +653,13 @@ class ExecutionEngine:
             if cfg.straggler_factor > 1.0 and self.t >= st.ready_at + 60:
                 best_pred = min(self.prov.perf.get(i, st.spec)
                                 for i in self.market.pool)
-                obs = self.backend.step_time(st.spec, a.inst)
+                obs = self.backend.step_time(st.spec, st.a_inst)
                 if obs > cfg.straggler_factor * best_pred:
                     self._checkpoint(st)
-                    st.exclude = {a.inst.name}
+                    st.exclude = {st.a_inst.name}
                     self._release(st, revoked=False)
                     st.status = Status.WAITING
-                    self.events.append((self.t, "straggler", st.spec.key))
+                    self._events.append((self.t, "straggler", st.spec.key))
                     continue
         return touched
 
@@ -636,11 +688,13 @@ class ExecutionEngine:
         for st in touched:
             if st.status != Status.RUNNING:
                 continue
-            a = st.alloc
-            cand = a.t_start + HOUR                       # 1-hour rotation
-            if a.t_revoke is not None:
-                b = a.t_revoke if st.notice_handled \
-                    else a.t_revoke - cfg.notice_s
+            cand = st.a_t_start + HOUR                    # 1-hour rotation
+            trev = st.a_t_revoke
+            if trev < math.inf:
+                # the notice boundary is clamped to the allocation start so
+                # an over-price acquire never schedules a past-time event
+                b = trev if st.notice_handled \
+                    else max(st.a_t_start, trev - cfg.notice_s)
                 if b < cand:
                     cand = b
             spt = st._spt
@@ -822,8 +876,7 @@ class ExecutionEngine:
         instead of forcing single-tick stepping."""
         cfg = self.cfg
         tick_s = cfg.tick_s
-        a = st.alloc
-        inst = a.inst
+        inst = st.a_inst
         obs = self.backend.step_time(st.spec, inst)
         k_elig = math.ceil((st.ready_at + 60) / tick_s - 1e-7)
         if k_elig <= k_now:

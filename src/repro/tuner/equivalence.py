@@ -106,14 +106,16 @@ def run_one(workload: Workload, exact_ticks: bool, market_seed: int = 3,
             scheduler_factory: Optional[Callable] = None,
             searcher_factory: Optional[Callable] = None,
             initial_trials: Optional[int] = None,
-            n_trials: Optional[int] = None, **engine_kw):
+            n_trials: Optional[int] = None,
+            ledger: Optional[str] = None, **engine_kw):
     """One tuning run on a fresh market replica -> (engine, RunResult).
 
     ``searcher_factory(workload)`` swaps the default ListSearcher prefix
     (paired policies like PBT bring their own explore searcher);
     ``initial_trials`` passes through to the Tuner for incremental
-    suggestion."""
-    market = SpotMarket(days=days, seed=market_seed)
+    suggestion; ``ledger`` forces the market's allocation-ledger layout
+    ("scalar" | "columnar", None = default)."""
+    market = SpotMarket(days=days, seed=market_seed, ledger=ledger)
     backend = SimTrialBackend(market.pool)
     revpred = (revpred_factory or (lambda m: ZeroRevPred()))(market)
     engine = build_engine(market, backend, revpred, seed=seed,
@@ -185,4 +187,52 @@ def compare_sweep_modes(specs, use_tables: bool = True) -> List[str]:
                 out.append(f"[{label}] result.{field}: "
                            f"soa={getattr(ts.result, field)!r} "
                            f"gen={getattr(rr.result, field)!r}")
+    return out
+
+
+def compare_ledger_modes(specs) -> List[str]:
+    """Run one ScenarioSpec grid through the SoA stepper twice — once under
+    the scalar allocation ledger (the reference implementation) and once
+    under the columnar one — on independently built replica sets (shared
+    caches dropped before each) and diff every observable outcome strictly.
+    Empty == the columnar ledger's batched crossing search and prefix-sum
+    billing are bit-exact against the scalar acquire/release loop."""
+    import dataclasses
+
+    from repro.sweep import runner as runner_mod
+    from repro.sweep.soa import SoaSweep, soa_supported
+
+    runner = runner_mod.SweepRunner()
+    by_kind = {}
+    for kind in ("scalar", "columnar"):
+        runner_mod.clear_shared_caches()
+        tuners = runner.prepare([dataclasses.replace(s, ledger=kind)
+                                 for s in specs])
+        if not soa_supported(tuners):
+            return ["grid not soa_supported — nothing to compare"]
+        SoaSweep(tuners).run()
+        by_kind[kind] = tuners
+
+    out: List[str] = []
+    for spec, ts, tc in zip(specs, by_kind["scalar"], by_kind["columnar"]):
+        label = (f"{spec.workload}/{spec.scheduler}"
+                 f"/m{spec.market_seed}/e{spec.engine_seed}")
+        if ts.result is None or tc.result is None:
+            out.append(f"[{label}] replica never finished")
+            continue
+        assert ts.engine.market.ledger.kind == "scalar"
+        assert tc.engine.market.ledger.kind == "columnar"
+        for field in ("cost", "refunded", "jct", "predicted_rank",
+                      "redeployments", "events"):
+            a, b = getattr(ts.result, field), getattr(tc.result, field)
+            if a != b:
+                out.append(f"[{label}] result.{field}: "
+                           f"scalar={a!r} columnar={b!r}")
+        if (ts.engine.market.billed != tc.engine.market.billed
+                or ts.engine.market.refunded != tc.engine.market.refunded):
+            out.append(f"[{label}] market totals: "
+                       f"scalar=({ts.engine.market.billed!r}, "
+                       f"{ts.engine.market.refunded!r}) "
+                       f"columnar=({tc.engine.market.billed!r}, "
+                       f"{tc.engine.market.refunded!r})")
     return out

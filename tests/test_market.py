@@ -35,7 +35,20 @@ def test_notice_is_two_minutes_before():
     inst = m.pool[0]
     a = m.acquire(inst, max_price=m.price(inst, 0.0) + 1e-5, t=0.0)
     if a.t_revoke is not None:
-        assert m.notice_time(a) == a.t_revoke - 120.0
+        assert m.notice_time(a) == max(a.t_start, a.t_revoke - 120.0)
+
+
+def test_notice_never_precedes_acquisition():
+    """Over-price acquire revokes one interval out; the two-minute notice
+    must clamp to the acquisition instant instead of landing before it."""
+    m = SpotMarket(days=2, seed=3, notice_s=120.0)
+    inst = m.pool[0]
+    t = 10 * MINUTE
+    a = m.acquire(inst, max_price=m.price(inst, t) - 1e-6, t=t)
+    assert a.t_revoke == t + MINUTE           # bumped past the acquire tick
+    nt = m.notice_time(a)
+    assert nt == t                            # clamped: raw would be t - 60s
+    assert nt >= a.t_start
 
 
 def test_first_hour_refund():

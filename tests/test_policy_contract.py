@@ -823,7 +823,8 @@ def test_classify_rows_matches_scalar_branch_order(seed, n):
     for j in range(n):
         has_rev = math.isfinite(t_revoke[j])
         want_notice = (has_rev and not notice_handled[j]
-                       and t[j] >= t_revoke[j] - notice_s[j])
+                       and t[j] >= max(t_start[j],
+                                       t_revoke[j] - notice_s[j]))
         if has_rev and t[j] >= t_revoke[j]:
             want = 1
         elif steps[j] >= target[j] or stopped[j]:
