@@ -231,7 +231,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,fig12,"
-                         "asha,roofline,train,soa_kernel,ledger")
+                         "asha,roofline,train,soa_kernel,ledger,service")
     ap.add_argument("--json", nargs="?", const="BENCH_simcore.json",
                     default=None, metavar="PATH",
                     help="write a JSON benchmark record (default "
@@ -264,7 +264,8 @@ def main() -> None:
     from benchmarks import (asha_compare, fig6_profiling, fig7_cost_perf,
                             fig8_theta, fig9_refund, fig10_revpred,
                             fig11_earlycurve, fig12_checkpoint, ledger,
-                            roofline_report, soa_kernel, training_trials)
+                            roofline_report, serve_load, soa_kernel,
+                            training_trials)
     from repro.core.trial import WORKLOADS
 
     quick_w = WORKLOADS[:2]
@@ -288,6 +289,7 @@ def main() -> None:
         "soa_kernel": lambda: soa_kernel.run(quick=args.quick),
         "ledger": lambda: ledger.run(quick=args.quick),
         "train": lambda: training_trials.run(quick=args.quick),
+        "service": lambda: serve_load.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(suite)
 
@@ -364,6 +366,13 @@ def main() -> None:
             failures += 1
             print(f"sweep_ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+
+    # the full-mode service load bench records a sweep-style entry too
+    # (studies/s, p99 admission latency) so --append-history tracks the
+    # service trajectory alongside the SoA grids
+    if serve_load.LAST_SWEEP_RECORD:
+        record.setdefault("sweep", {})[serve_load.TRAJ_SUITE] = dict(
+            serve_load.LAST_SWEEP_RECORD)
 
     if args.speedup and not args.exact:
         fast = sum(s["fast_wall_s"] for n, s in record["suites"].items()

@@ -1,0 +1,134 @@
+"""Tuning-service load benchmark (``repro.service``).
+
+Drives a synthetic heavy submission trace — bursts of single-replica
+studies from many tenants landing on a running ``TuningService`` with
+weighted max-min admission and market contention on — and measures the
+service-level answers docs/perf.md tracks:
+
+  * sustained **studies/s** and **replicas/s** (completed work over the
+    service's wall clock, submission-to-last-result);
+  * **admission-to-decision latency**: per study, wall time from
+    ``submit()`` to its first ``SoaSweep`` round (p99 + mean over the
+    trace) — the queueing delay a tenant sees under load;
+  * **service overhead**: the same flat spec list run through a plain
+    ``SweepRunner`` SoA sweep (no admission, no contention, one engine
+    sea) vs the multiplexed per-study loop, as a wall-clock ratio.
+
+The submission trace is deterministic (no RNG, no wall-clock branching):
+studies arrive in fixed bursts every ``PUMPS_PER_BURST`` scheduling
+iterations, so reruns replay the same interleaving and the latency
+distribution is comparable across PRs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.service import StudySpec, TuningService
+from repro.sweep import SweepRunner, clear_shared_caches, scenario_grid
+
+TENANTS = 16            # full-mode trace width (quick: 4)
+BURST = 4               # studies submitted per arrival burst
+PUMPS_PER_BURST = 10    # scheduling iterations between bursts
+
+# the last full-mode run's service record, injected by benchmarks/run.py
+# into the BENCH json's ``sweep`` section (and, with --append-history,
+# the cross-PR trajectory) under this suite name
+TRAJ_SUITE = "serve_load16"
+LAST_SWEEP_RECORD: dict = {}
+
+
+def _studies(n: int) -> list:
+    from repro.core.trial import WORKLOADS
+
+    names = [w.name for w in WORKLOADS[:4]]
+    out = []
+    for i in range(n):
+        specs = scenario_grid([names[i % len(names)]], [100 + i],
+                              revpred="oracle", theta=0.7, days=8.0)
+        out.append(StudySpec(tenant=f"tenant-{i:02d}", specs=tuple(specs),
+                             weight=1.0 + (i % 2)))
+    return out
+
+
+def _serve(studies: list) -> tuple:
+    """One full submission trace; returns (wall_s, latencies, service)."""
+    clear_shared_caches()
+    svc = TuningService(policy="maxmin", policy_params={"max_active": 4},
+                        contention=True)
+    t0 = time.perf_counter()
+    pending = list(studies)
+    ids = []
+    while pending:
+        ids.extend(svc.submit(s) for s in pending[:BURST])
+        del pending[:BURST]
+        for _ in range(PUMPS_PER_BURST):
+            if not svc.pump():
+                break
+    svc.run_until_complete()
+    wall = time.perf_counter() - t0
+    recs = [svc.registry.get(i) for i in ids]
+    bad = [r.study_id for r in recs if r.result is None]
+    if bad:
+        raise AssertionError(f"studies did not complete: {bad}")
+    lat = np.array([r.first_step_wall - r.submitted_wall for r in recs])
+    return wall, lat, svc
+
+
+def run(quick: bool = False) -> list:
+    tenants = 4 if quick else TENANTS
+    reps = 1 if quick else 2
+    studies = _studies(tenants)
+    flat = [s for st in studies for s in st.specs]
+    runner = SweepRunner()
+
+    # warm trace-synthesis and jit caches off the clock, then measure the
+    # un-multiplexed baseline: the same flat grid, one SoA sweep
+    runner.run(flat)
+    plain_wall = float("inf")
+    for _ in range(reps):
+        clear_shared_caches()
+        plain_wall = min(plain_wall, runner.run(flat).wall_s)
+
+    wall = float("inf")
+    lat = svc = None
+    for _ in range(reps):
+        w, l, s = _serve(studies)
+        if w < wall:
+            wall, lat, svc = w, l, s
+
+    n_replicas = len(flat)
+    rec = {
+        "tenants": tenants,
+        "replicas": n_replicas,
+        "service_wall_s": round(wall, 3),
+        "plain_soa_wall_s": round(plain_wall, 3),
+        "studies_per_sec": round(tenants / wall, 2),
+        "replicas_per_sec": round(n_replicas / wall, 2),
+        "p99_admit_s": round(float(np.quantile(lat, 0.99)), 4),
+        "mean_admit_s": round(float(lat.mean()), 4),
+        "demand_events": len(svc.env.events),
+        # service multiplexing + contention cost vs the flat sweep (<1 =
+        # the service run was slower, which it should modestly be)
+        "speedup_vs_batched": round(plain_wall / max(wall, 1e-9), 2),
+    }
+    if not quick:
+        LAST_SWEEP_RECORD.clear()
+        LAST_SWEEP_RECORD.update(rec)
+    return [
+        ("service_studies_per_sec", 0.0, f"{rec['studies_per_sec']:.2f}"),
+        ("service_replicas_per_sec", 0.0, f"{rec['replicas_per_sec']:.2f}"),
+        ("service_p99_admit_s", 0.0, f"{rec['p99_admit_s']:.4f}"),
+        ("service_mean_admit_s", 0.0, f"{rec['mean_admit_s']:.4f}"),
+        ("service_overhead_ratio", 0.0,
+         f"{rec['speedup_vs_batched']:.2f}"),
+        ("service_tenants", 0.0, str(tenants)),
+        ("service_demand_events", 0.0, str(rec["demand_events"])),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(quick=True):
+        print(f"{name},{us:.2f},{derived}")

@@ -340,6 +340,24 @@ def clear_trace_caches() -> None:
     _PRICE_LIST_CACHE.clear()
 
 
+def invalidate_trace_indices(tr: np.ndarray) -> None:
+    """Drop the derived indices (prefix sums, block maxima, price lists) of
+    one trace after an in-place mutation.
+
+    The derived caches key by ``id(tr)`` and validate with an ``is`` check —
+    sound for frozen traces, but a contended market
+    (``repro.service.market.SharedSpotMarket``) mutates its private trace
+    copies in place, which preserves identity and would silently serve the
+    pre-mutation indices.  Callers that mutate must invalidate explicitly;
+    per-minute entries already read (``_AVG_CACHE``, the market minute
+    memos) are the caller's to handle — ``SharedSpotMarket`` bypasses or
+    resets them."""
+    key = id(tr)
+    _PREFIX_CACHE.pop(key, None)
+    _BLOCKMAX_CACHE.pop(key, None)
+    _PRICE_LIST_CACHE.pop(key, None)
+
+
 def _parse_ts(ts) -> float:
     """Timestamp -> epoch seconds.  Accepts numeric values and ISO-8601
     (``2020-01-01T00:00:00``, optional fraction/offset, trailing ``Z``)."""
@@ -422,6 +440,7 @@ class ScalarLedger:
 
     def acquire_row(self, inst: InstanceType, max_price: float, t: float):
         m = self.market
+        m._note_demand(inst, t)
         cross = m._first_crossing(inst.name, int(t / MINUTE), max_price)
         t_rev = cross * MINUTE if cross is not None else None
         if t_rev is not None and t_rev <= t:
@@ -510,6 +529,7 @@ class ColumnarLedger:
     def acquire_row(self, inst: InstanceType, max_price: float, t: float):
         row = self._begin(inst, max_price, t)
         m = self.market
+        m._note_demand(inst, t)
         cross = m._first_crossing(inst.name, int(t / MINUTE), max_price)
         t_rev = math.inf if cross is None else cross * MINUTE
         if t_rev <= t:
@@ -606,6 +626,7 @@ def acquire_batch_multi(jobs) -> list:
             out[j] = led.acquire_row(inst, max_price, t)
             continue
         row = led._begin(inst, max_price, t)
+        market._note_demand(inst, t)
         out[j] = row
         tr = market.traces[inst.name]
         g = groups.setdefault((id(tr), int(t / MINUTE)), [tr, [], []])
@@ -768,6 +789,14 @@ class SpotMarket:
 
     def horizon_s(self) -> float:
         return self.minutes * MINUTE
+
+    def _note_demand(self, inst: InstanceType, t: float) -> None:
+        """Demand-impulse hook, called once per acquisition (all paths:
+        scalar/columnar ``acquire_row`` and the batched burst).  A plain
+        market is a price-taker — the paper's single-tenant assumption —
+        so this is a no-op; ``repro.service.market.SharedSpotMarket``
+        overrides it to record aggregate tenant demand that shifts the OU
+        price process for every study sharing the market."""
 
     # ----------------------------------------------------------- allocation
     def acquire(self, inst: InstanceType, max_price: float, t: float) -> Allocation:

@@ -1,0 +1,42 @@
+"""Multi-tenant tuning service over a shared, contended spot market.
+
+The paper's orchestrator — and everything below ``repro.sweep`` — serves
+one user.  This package is the millions-of-users scenario: a long-running
+service that multiplexes many concurrent tuning *studies* over one
+simulated spot market, where aggregate tenant demand moves prices and
+revocation risk for everyone (the paper's single-tenant price-taker
+assumption becomes the degenerate case).
+
+Layers:
+
+* ``spec``       — ``StudySpec`` (a tenant's batch of ``ScenarioSpec``
+                   replicas) and ``StudyStatus``
+* ``registry``   — ``StudyRegistry``: id allocation, per-study incremental
+                   result records, poll cursors, cancel/pause
+* ``admission``  — pluggable fairness policies (FIFO, weighted max-min
+                   over instance-seconds, per-tenant budget caps) gating
+                   which studies enter each SoA round
+* ``market``     — ``MarketEnv`` + ``SharedSpotMarket``: the demand-impulse
+                   contention model over ``repro.core.market``
+* ``loop``       — ``TuningService``: the deterministic cooperative event
+                   loop stepping admitted studies' ``SoaSweep`` rounds
+
+``tuner.equivalence.compare_service_modes`` pins the degenerate case: a
+contention-disabled single-tenant service run is bit-exact against
+``SweepRunner``.
+"""
+
+from repro.service.admission import (FAIRNESS_POLICIES, BudgetCapPolicy,
+                                     FifoPolicy, StudyView,
+                                     WeightedMaxMinPolicy)
+from repro.service.loop import TuningService
+from repro.service.market import MarketEnv, SharedSpotMarket
+from repro.service.registry import StudyRecord, StudyRegistry
+from repro.service.spec import StudySpec, StudyStatus
+
+__all__ = [
+    "FAIRNESS_POLICIES", "BudgetCapPolicy", "FifoPolicy",
+    "WeightedMaxMinPolicy", "StudyView", "TuningService", "MarketEnv",
+    "SharedSpotMarket", "StudyRecord", "StudyRegistry", "StudySpec",
+    "StudyStatus",
+]

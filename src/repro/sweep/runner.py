@@ -81,8 +81,14 @@ class SweepRunner:
                 [(inst, seed) for seed in sorted(seeds) for inst in pool],
                 minutes)
 
-    def prepare(self, specs: Sequence[ScenarioSpec]) -> List[Tuner]:
-        """Materialize replicas with shared traces/backend/predictors."""
+    def prepare(self, specs: Sequence[ScenarioSpec],
+                market_factory=None) -> List[Tuner]:
+        """Materialize replicas with shared traces/backend/predictors.
+
+        ``market_factory(spec) -> SpotMarket`` overrides how each replica's
+        market is built — the tuning service injects contended
+        ``SharedSpotMarket`` instances here; the default is the plain
+        single-tenant construction, byte-identical to before."""
         for spec in specs:
             spec.validate()       # whole-grid gate before any heavy work
         self._prewarm_traces(specs)
@@ -100,8 +106,11 @@ class SweepRunner:
         shared_rp: Dict[tuple, object] = {}
         tuners = []
         for spec in specs:
-            market = SpotMarket(days=spec.days, seed=spec.market_seed,
-                                ledger=spec.ledger or None)
+            if market_factory is not None:
+                market = market_factory(spec)
+            else:
+                market = SpotMarket(days=spec.days, seed=spec.market_seed,
+                                    ledger=spec.ledger or None)
             rp_key = (spec.market_key(), spec.revpred, spec.engine_seed)
             rp = shared_rp.get(rp_key)
             if rp is None:

@@ -55,7 +55,8 @@ from repro.core.trial import SimTrialBackend, _jitter_entry
 from repro.kernels.soa_step import (_use_pallas, ewma_fold, segmented_min,
                                     soa_step_fused)
 from repro.sweep.runner import SweepRunner
-from repro.tuner.engine import ProvisionBatch, Status
+from repro.tuner.engine import (ProvisionBatch, Status,
+                                preview_boundary_batch)
 from repro.tuner.events import (HourRotation, MetricReported, RevocationNotice,
                                 TrialFinished, TrialRevoked)
 from repro.tuner.scheduler import DecisionKind
@@ -118,8 +119,13 @@ class SoaSweep:
     """Executes many Tuner replicas in lockstep SoA rounds; results land in
     each ``tuner.result`` exactly as ``run_cooperative`` would leave them."""
 
-    def __init__(self, tuners: Sequence[Tuner], use_tables: bool = True):
+    def __init__(self, tuners: Sequence[Tuner], use_tables: bool = True,
+                 batch_preview: bool = True):
         self.tuners = list(tuners)
+        # batch the post-deploy _preview_boundary recompute across the burst
+        # (one searchsorted pair for the whole burst instead of two per row);
+        # False pins the scalar per-row loop — the bit-exactness test's lever
+        self.batch_preview = batch_preview
         self.engines = [t.engine for t in self.tuners]
         self._rep_of = {id(e): r for r, e in enumerate(self.engines)}
         # batched-lifecycle gate per replica: the scheduler must declare a
@@ -218,14 +224,37 @@ class SoaSweep:
 
     # ------------------------------------------------------------ main loop
     def run(self) -> None:
-        while True:
-            act = np.nonzero(self.active)[0]
-            if len(act):
-                self._round(act)
-            elif self.parked:
-                self._flush_fits()
-            else:
-                return
+        while self.step():
+            pass
+
+    def step(self, allowed: Optional[Sequence[int]] = None) -> bool:
+        """One unit of sweep progress: advance one SoA round over the active
+        replicas (restricted to ``allowed`` replica indices when given — the
+        tuning service's admission gate), or, with no engine work left
+        anywhere, flush the parked idle-fit generators.  Returns True while
+        any replica remains unfinished, so ``run()`` is ``while self.step():
+        pass`` and a service loop interleaves many sweeps round by round."""
+        act = np.nonzero(self.active)[0]
+        if allowed is not None and len(act):
+            gate = np.zeros(self.R, bool)
+            idx = np.asarray(list(allowed), np.int64)
+            if len(idx):
+                gate[idx] = True
+            act = act[gate[act]]
+        if len(act):
+            self._round(act)
+        elif self.parked:
+            self._flush_fits()
+        return bool(self.active.any() or self.parked)
+
+    def next_time(self) -> float:
+        """Earliest upcoming boundary among active replicas (+inf when only
+        parked idle fits or nothing remain) — the service loop's global
+        ordering key for picking which study steps next."""
+        act = np.nonzero(self.active)[0]
+        if not len(act):
+            return math.inf
+        return float(self.t_next[act].min())
 
     def _round(self, act: np.ndarray) -> None:
         self._round_no += 1
@@ -892,7 +921,9 @@ class SoaSweep:
         k = np.ceil(cand / tick - 1e-7).astype(np.int64)
         k = np.where(k <= kn, kn + 1, k)
         if prev.any():
-            for j in np.nonzero(prev)[0]:
+            pidx = np.nonzero(prev)[0]
+            items = []
+            for j in pidx:
                 st = sts[j]
                 eng = self.engines[reps[j]]
                 kl = int(k[j])
@@ -903,8 +934,14 @@ class SoaSweep:
                     kf = int(kfin[j])
                     if kf > kl:
                         kl = kf
-                k_act = eng._preview_boundary(st, float(start[j]),
-                                              float(spt[j]), int(kn[j]), kl)
+                items.append((eng, st, float(start[j]), float(spt[j]),
+                              int(kn[j]), kl))
+            if self.batch_preview and len(items) > 1:
+                answers = preview_boundary_batch(items)
+            else:
+                answers = [eng._preview_boundary(st, s0, sp, knj, kl)
+                           for eng, st, s0, sp, knj, kl in items]
+            for j, k_act in zip(pidx, answers):
                 if k_act is not None and k_act < k[j]:
                     k[j] = k_act
         for j, i in enumerate(idx):

@@ -99,41 +99,64 @@ class ScenarioSpec:
         """Check the policy/space/backend combo against the machine-readable
         registry (``repro.tuner.registry.describe_json``) before any replica
         is built — invalid combos fail here with a targeted message instead
-        of surfacing as a mid-run construction error."""
+        of surfacing as a mid-run construction error.  Every invalid field
+        is reported in the one raised ``ValueError`` (batch submitters — the
+        tuning service's ``StudySpec`` — need the full list, not the first
+        hit)."""
+        errs = self.validation_errors()
+        if errs:
+            raise ValueError(
+                f"invalid ScenarioSpec ({len(errs)} problem"
+                f"{'s' if len(errs) > 1 else ''}): " + "; ".join(errs))
+
+    def validation_errors(self) -> List[str]:
+        """All invalid fields, one message each; empty when valid.  Checks
+        that depend on another field being valid (backend-space binding,
+        continuous-searcher support) are skipped when that field already
+        failed, so the list never contains cascading noise."""
         from repro.tuner.registry import describe_json
         info = describe_json()
-        if self.backend not in info["backends"]:
-            raise ValueError(f"unknown backend {self.backend!r} "
-                             f"(registered: {sorted(info['backends'])})")
-        bmeta = info["backends"][self.backend]
+        errs: List[str] = []
+        bmeta = None
+        if self.backend in info["backends"]:
+            bmeta = info["backends"][self.backend]
+        else:
+            errs.append(f"unknown backend {self.backend!r} "
+                        f"(registered: {sorted(info['backends'])})")
         if self.scheduler not in info["schedulers"]:
-            raise ValueError(f"unknown scheduler {self.scheduler!r} "
-                             f"(registered: {sorted(info['schedulers'])})")
+            errs.append(f"unknown scheduler {self.scheduler!r} "
+                        f"(registered: {sorted(info['schedulers'])})")
         _, searcher, _ = resolve_policy(self)
-        if searcher not in info["searchers"]:
-            raise ValueError(f"unknown searcher {searcher!r} "
-                             f"(registered: {sorted(info['searchers'])})")
+        searcher_known = searcher in info["searchers"]
+        if not searcher_known:
+            errs.append(f"unknown searcher {searcher!r} "
+                        f"(registered: {sorted(info['searchers'])})")
         if self.space not in info["spaces"]:
-            raise ValueError(f"unknown space {self.space!r} "
-                             f"(known: {info['spaces']})")
-        if self.space not in bmeta["spaces"]:
-            raise ValueError(
+            errs.append(f"unknown space {self.space!r} "
+                        f"(known: {info['spaces']})")
+        elif bmeta is not None and self.space not in bmeta["spaces"]:
+            errs.append(
                 f"backend {self.backend!r} ground-truths spaces "
                 f"{bmeta['spaces']}, not {self.space!r} (real training has "
                 "no anchor-lattice interpolation for grid-free configs)")
-        if (self.space == "continuous"
+        if (self.space == "continuous" and searcher_known
                 and not info["searchers"][searcher]["supports_continuous"]):
-            raise ValueError(
+            errs.append(
                 f"searcher {searcher!r} supports finite spaces only but "
                 f"space={self.space!r}; pick one with "
                 "supports_continuous=True (see registry.describe())")
-        if bmeta["workloads"] is not None:
+        if bmeta is not None:
             arch = (self.workload[len("train-"):]
                     if self.workload.startswith("train-") else self.workload)
-            if arch not in bmeta["workloads"]:
-                raise ValueError(
-                    f"backend {self.backend!r} binds workloads "
-                    f"{bmeta['workloads']}, got {self.workload!r}")
+            if bmeta["workloads"] is not None:
+                if arch not in bmeta["workloads"]:
+                    errs.append(
+                        f"backend {self.backend!r} binds workloads "
+                        f"{bmeta['workloads']}, got {self.workload!r}")
+            elif self.workload not in _WORKLOADS_BY_NAME:
+                errs.append(f"unknown workload {self.workload!r} "
+                            f"(known: {sorted(_WORKLOADS_BY_NAME)})")
+        return errs
 
     def market_key(self) -> tuple:
         """Replicas agreeing on this key can share one trace set."""

@@ -190,6 +190,63 @@ def compare_sweep_modes(specs, use_tables: bool = True) -> List[str]:
     return out
 
 
+def compare_service_modes(specs, policy: str = "fifo",
+                          policy_params: Optional[dict] = None) -> List[str]:
+    """Pin the tuning service's degenerate case: one tenant, contention
+    disabled.  The same ScenarioSpec grid runs once as a single submitted
+    ``StudySpec`` through ``TuningService`` (under any fairness policy —
+    with one study, admission must be inert) and once through the plain
+    ``SweepRunner`` SoA path, on independently built replica sets (shared
+    caches dropped before each).  Billing records, event logs, metric
+    histories, and results must match bit-exact; empty == equivalent."""
+    from repro.service import StudySpec, StudyStatus, TuningService
+    from repro.sweep import runner as runner_mod
+    from repro.sweep.soa import SoaSweep, soa_supported
+
+    runner_mod.clear_shared_caches()
+    svc = TuningService(policy=policy, policy_params=policy_params,
+                        contention=False)
+    sid = svc.submit(StudySpec(tenant="t0", specs=tuple(specs)))
+    svc.run_until_complete()
+    svc_rec = svc.registry.get(sid)
+
+    runner = runner_mod.SweepRunner()
+    runner_mod.clear_shared_caches()
+    ref = runner.prepare(specs)
+    if not soa_supported(ref):
+        return ["grid not soa_supported — nothing to compare"]
+    SoaSweep(ref).run()
+
+    out: List[str] = []
+    if svc_rec.status is not StudyStatus.DONE:
+        out.append(f"service study status: {svc_rec.status}")
+    if len(svc_rec.records) != len(specs):
+        out.append(f"streamed records: service={len(svc_rec.records)} "
+                   f"expected={len(specs)}")
+    for spec, tv, tr in zip(specs, svc_rec.tuners, ref):
+        label = (f"{spec.workload}/{spec.scheduler}"
+                 f"/m{spec.market_seed}/e{spec.engine_seed}")
+        if tv.result is None or tr.result is None:
+            out.append(f"[{label}] replica never finished")
+            continue
+        sub = compare_engines(tv.engine, tr.engine, tv.result, tr.result)
+        out.extend(f"[{label}] {line}" for line in sub)
+        for field in ("cost", "refunded", "jct", "predicted_rank",
+                      "redeployments", "events"):
+            a, b = getattr(tv.result, field), getattr(tr.result, field)
+            if a != b:
+                out.append(f"[{label}] result.{field}: "
+                           f"service={a!r} runner={b!r}")
+        for field in ("steps_total", "free_steps", "lost_steps",
+                      "ckpt_seconds", "restore_seconds"):
+            if not _close(getattr(tv.result, field),
+                          getattr(tr.result, field)):
+                out.append(f"[{label}] result.{field}: "
+                           f"service={getattr(tv.result, field)!r} "
+                           f"runner={getattr(tr.result, field)!r}")
+    return out
+
+
 def compare_ledger_modes(specs) -> List[str]:
     """Run one ScenarioSpec grid through the SoA stepper twice — once under
     the scalar allocation ledger (the reference implementation) and once

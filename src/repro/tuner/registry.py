@@ -140,6 +140,21 @@ def make_searcher(name: str, workload: Workload,
     return factory(workload, {**(params or {}), **kw})
 
 
+def make_fairness_policy(name: str, params: Optional[Mapping] = None):
+    """Service admission policy by name (``fifo`` | ``maxmin`` |
+    ``budget``) — the tuning service's pluggable fairness catalog
+    (``repro.service.admission``; imported lazily to keep the core
+    registry service-free)."""
+    from repro.service.admission import FAIRNESS_POLICIES
+    try:
+        factory = FAIRNESS_POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown fairness policy {name!r} "
+                         f"(registered: {sorted(FAIRNESS_POLICIES)})") \
+            from None
+    return factory(dict(params or {}))
+
+
 def describe_json() -> dict:
     """Machine-readable registry dump: schedulers, searchers (with their
     capability flags), paired-policy defaults, and the trial-backend
@@ -162,6 +177,9 @@ def describe_json() -> dict:
         "policy_defaults": {k: dict(v) for k, v in POLICY_DEFAULTS.items()},
         "backends": {name: dict(meta) for name, meta in BACKENDS.items()},
         "spaces": ["grid", "continuous"],
+        "fairness": {
+            name: {"class": type(make_fairness_policy(name)).__name__}
+            for name in ("fifo", "maxmin", "budget")},
     }
 
 
@@ -194,6 +212,10 @@ def describe() -> str:
         dflt = " (default)" if meta.get("default") else ""
         lines.append(f"  {name:<14} spaces: {'+'.join(meta['spaces']):<21} "
                      f"[{meta['class']}] {wl}{dflt}")
+    lines += ["", "fairness (service admission)", "----------------------------"]
+    lines.append("  fifo           submission order, max_active cap")
+    lines.append("  maxmin         weighted max-min over instance-seconds")
+    lines.append("  budget         per-tenant spend caps over fifo/maxmin")
     return "\n".join(lines)
 
 

@@ -1,0 +1,390 @@
+"""Multi-tenant tuning service: single-tenant bit-exactness, multi-tenant
+determinism, fairness invariants, market contention, the study API, and
+the batched-preview satellite.
+
+The acceptance pin is ``compare_service_modes``: a contention-disabled
+single-tenant service run must be bit-exact (billing records, event logs,
+metric histories, results) against the plain ``SweepRunner`` SoA path
+across the 5-policy x 4-workload x 5-seed cube.  Contention itself cannot
+be pinned against the single-tenant path (moving prices is its purpose) —
+it is pinned on *determinism*: identical submissions replay identical
+interleavings, event logs, and dollars.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.trial import WORKLOADS
+from repro.service import (BudgetCapPolicy, FifoPolicy, StudySpec,
+                           StudyStatus, StudyView, TuningService,
+                           WeightedMaxMinPolicy)
+from repro.sweep import clear_shared_caches, scenario_grid
+from repro.sweep.spec import ScenarioSpec
+from repro.tuner.equivalence import compare_service_modes
+
+SWEEP_POLICIES = ("spottune", "asha", "hyperband", "pbt", "adaptive")
+SWEEP_SEEDS = (1, 3, 7, 11, 23)
+
+
+def _grid(workloads, seeds, **kw):
+    kw.setdefault("revpred", "oracle")
+    kw.setdefault("theta", 0.7)
+    kw.setdefault("days", 8.0)
+    return scenario_grid(workloads, seeds, **kw)
+
+
+def _small_study(tenant, workload="LoR", seeds=(1,), **kw):
+    return StudySpec(tenant=tenant,
+                     specs=tuple(_grid([workload], seeds, **kw)), **{})
+
+
+# ---------------------------------------------------------------------------
+# acceptance cube: contention-off single-tenant service == SweepRunner
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", SWEEP_POLICIES)
+def test_service_single_tenant_bit_exact_cube(policy):
+    """The 4-workload x 5-seed grid per policy, submitted as one study,
+    must be bit-exact against the plain SoA sweep."""
+    names = [w.name for w in WORKLOADS[:4]]
+    specs = _grid(names, SWEEP_SEEDS, scheduler=policy)
+    diffs = compare_service_modes(specs)
+    assert diffs == [], "\n".join(diffs)
+
+
+@pytest.mark.parametrize("fairness", ("fifo", "maxmin"))
+def test_service_equivalence_any_fairness_policy(fairness):
+    """With one study, admission must be inert regardless of policy."""
+    specs = _grid(["LoR"], (1, 3))
+    diffs = compare_service_modes(specs, policy=fairness)
+    assert diffs == [], "\n".join(diffs)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant determinism under contention
+# ---------------------------------------------------------------------------
+
+
+def _run_three_tenants(contention=True, impact=0.04, policy="maxmin",
+                       params={"max_active": 2}):
+    clear_shared_caches()
+    svc = TuningService(policy=policy, policy_params=dict(params),
+                        contention=contention, impact=impact)
+    ids = []
+    for tenant, w, s in (("alice", "LoR", 1), ("bob", "SVM", 2),
+                         ("carol", "LoR", 3)):
+        ids.append(svc.submit(StudySpec(
+            tenant=tenant, specs=tuple(_grid([w], [s])))))
+    svc.run_until_complete()
+    return svc, ids
+
+
+def test_multi_tenant_interleaving_is_deterministic():
+    """Same (tenant set, seeds) twice -> identical interleaved step log,
+    admission log, per-study event logs, and dollars."""
+    svc1, ids1 = _run_three_tenants()
+    svc2, ids2 = _run_three_tenants()
+    assert svc1.step_log == svc2.step_log
+    assert svc1.admission_log == svc2.admission_log
+    assert svc1.env.events == svc2.env.events
+    for i1, i2 in zip(ids1, ids2):
+        r1, r2 = svc1.registry.get(i1), svc2.registry.get(i2)
+        assert r1.status is StudyStatus.DONE
+        assert [m.billed for m in r1.markets] == \
+            [m.billed for m in r2.markets]
+        for t1, t2 in zip(r1.tuners, r2.tuners):
+            assert t1.engine.events == t2.engine.events
+
+
+def test_contention_moves_prices_and_revocation_pressure():
+    """Demand impulses are recorded and shift outcomes vs the same
+    submissions with contention off; the off path matches plain markets."""
+    svc_on, ids_on = _run_three_tenants(contention=True)
+    svc_off, ids_off = _run_three_tenants(contention=False)
+    assert len(svc_on.env.events) > 0
+    assert svc_off.env is None
+    billed_on = [sum(m.billed for m in svc_on.registry.get(i).markets)
+                 for i in ids_on]
+    billed_off = [sum(m.billed for m in svc_off.registry.get(i).markets)
+                  for i in ids_off]
+    assert billed_on != billed_off
+    # a contended trace never exceeds the synthesizer's own price ceiling
+    for i in ids_on:
+        for m in svc_on.registry.get(i).markets:
+            for inst in m.pool:
+                assert float(m.traces[inst.name].max()) <= 2.0 * inst.od_price
+
+
+def test_zero_impact_contention_is_degenerate():
+    """impact=0 records no impulses: the contended machinery reproduces
+    the single-tenant dollars exactly (the paper's assumption as the
+    degenerate case)."""
+    svc0, ids0 = _run_three_tenants(contention=True, impact=0.0)
+    svc_off, ids_off = _run_three_tenants(contention=False)
+    assert svc0.env.events == []
+    for i0, ioff in zip(ids0, ids_off):
+        r0 = svc0.registry.get(i0)
+        roff = svc_off.registry.get(ioff)
+        assert [m.billed for m in r0.markets] == \
+            [m.billed for m in roff.markets]
+        for t0, toff in zip(r0.tuners, roff.tuners):
+            assert t0.engine.events == toff.engine.events
+
+
+# ---------------------------------------------------------------------------
+# fairness invariants
+# ---------------------------------------------------------------------------
+
+
+def _views(rows):
+    return [StudyView(study_id=s, tenant=t, seq=q, weight=w, usage_s=u,
+                      spend=sp, budget_cap=cap)
+            for s, t, q, w, u, sp, cap in rows]
+
+
+def test_fifo_policy_unit():
+    v = _views([("s1", "a", 1, 1.0, 50.0, 0.0, None),
+                ("s2", "b", 2, 1.0, 0.0, 0.0, None),
+                ("s3", "c", 3, 1.0, 0.0, 0.0, None)])
+    admit, cancel = FifoPolicy(max_active=2).select(v, {})
+    assert admit == ["s1", "s2"] and cancel == []
+    with pytest.raises(ValueError):
+        FifoPolicy(max_active=0)
+
+
+def test_weighted_maxmin_policy_unit():
+    """Admitted set == the argmin-k of usage/weight, ties on submission."""
+    v = _views([("s1", "a", 1, 1.0, 100.0, 0.0, None),
+                ("s2", "b", 2, 2.0, 150.0, 0.0, None),   # norm 75
+                ("s3", "c", 3, 1.0, 80.0, 0.0, None),
+                ("s4", "d", 4, 1.0, 80.0, 0.0, None)])
+    admit, _ = WeightedMaxMinPolicy(max_active=2).select(v, {})
+    assert admit == ["s2", "s3"]        # 75 < 80 == 80 (seq tie-break)
+
+
+def test_budget_policy_unit():
+    v = _views([("s1", "a", 1, 1.0, 0.0, 5.0, None),
+                ("s2", "b", 2, 1.0, 0.0, 1.0, 1.0),      # own cap hit
+                ("s3", "a", 3, 1.0, 0.0, 0.0, None)])
+    pol = BudgetCapPolicy(caps={"a": 4.0})
+    admit, cancel = pol.select(v, {"a": 5.0, "b": 1.0})
+    assert set(cancel) == {"s1", "s2", "s3"}              # tenant a over cap
+    assert admit == []
+    admit, cancel = pol.select(v, {"a": 3.0, "b": 1.0})
+    assert cancel == ["s2"] and admit == ["s1", "s3"]
+
+
+def test_maxmin_admission_respects_shares_in_service():
+    """Every admission round admits exactly the argmin-k of the normalized
+    usage snapshot the policy saw (the within-round max-min invariant),
+    and weights tilt long-run instance-second shares."""
+    svc, ids = _run_three_tenants(policy="maxmin", params={"max_active": 1})
+    assert len(svc.admission_log) > 10
+    for _, admitted, norm_usage in svc.admission_log:
+        k = len(admitted)
+        best = sorted(norm_usage, key=lambda s: (norm_usage[s], s))[:k]
+        assert list(admitted) == best
+
+
+def test_fifo_max_active_one_runs_in_submission_order():
+    """max_active=1 FIFO: study n+1 never steps before study n is done."""
+    clear_shared_caches()
+    svc = TuningService(policy="fifo", policy_params={"max_active": 1})
+    ids = [svc.submit(StudySpec(tenant=f"t{i}",
+                                specs=tuple(_grid(["LoR"], [i + 1]))))
+           for i in range(3)]
+    svc.run_until_complete()
+    stepped = [sid for _, sid, _ in svc.step_log]
+    # once a later study appears, the earlier one never reappears
+    first_seen = {sid: stepped.index(sid) for sid in ids}
+    last_seen = {sid: len(stepped) - 1 - stepped[::-1].index(sid)
+                 for sid in ids}
+    assert last_seen[ids[0]] < first_seen[ids[1]]
+    assert last_seen[ids[1]] < first_seen[ids[2]]
+
+
+def test_budget_cap_cancels_study():
+    clear_shared_caches()
+    svc = TuningService(policy="fifo")
+    sid = svc.submit(StudySpec(tenant="cheap", budget_cap=0.01,
+                               specs=tuple(_grid(["LoR"], [1]))))
+    svc.run_until_complete()
+    rec = svc.registry.get(sid)
+    assert rec.status is StudyStatus.CANCELLED
+    assert rec.records and rec.records[-1]["event"] == "study_cancelled"
+    assert rec.records[-1]["spend"] >= 0.01
+
+
+def test_tenant_budget_policy_cancels_in_service():
+    clear_shared_caches()
+    svc = TuningService(policy="budget",
+                        policy_params={"caps": {"beta": 0.005}})
+    a = svc.submit(StudySpec(tenant="alpha",
+                             specs=tuple(_grid(["LoR"], [1]))))
+    b = svc.submit(StudySpec(tenant="beta",
+                             specs=tuple(_grid(["SVM"], [2]))))
+    svc.run_until_complete()
+    assert svc.registry.get(a).status is StudyStatus.DONE
+    assert svc.registry.get(b).status is StudyStatus.CANCELLED
+
+
+# ---------------------------------------------------------------------------
+# study API: submit validation, poll/stream, cancel/pause
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_spec_reports_all_invalid_fields():
+    bad = ScenarioSpec(workload="LoR", market_seed=0, backend="bogus",
+                       scheduler="nope", searcher="missing", space="weird")
+    errs = bad.validation_errors()
+    msgs = "; ".join(errs)
+    assert len(errs) == 4
+    for frag in ("unknown backend", "unknown scheduler", "unknown searcher",
+                 "unknown space"):
+        assert frag in msgs
+    with pytest.raises(ValueError, match="4 problems"):
+        bad.validate()
+    assert ScenarioSpec(workload="LoR", market_seed=0).validation_errors() \
+        == []
+
+
+def test_study_spec_rejects_with_full_error_list():
+    bad = StudySpec(tenant="", weight=-1.0, budget_cap=0.0, specs=(
+        ScenarioSpec(workload="LoR", market_seed=0, backend="bogus"),
+        ScenarioSpec(workload="LoR", market_seed=0, scheduler="nope"),
+    ))
+    errs = bad.validation_errors()
+    msgs = "; ".join(errs)
+    assert "tenant" in msgs and "weight" in msgs and "budget_cap" in msgs
+    assert "specs[0]: unknown backend" in msgs
+    assert "specs[1]: unknown scheduler" in msgs
+    svc = TuningService()
+    with pytest.raises(ValueError, match="specs\\[1\\]"):
+        svc.submit(bad)
+    assert svc.registry.all() == []
+
+
+def test_poll_and_stream_yield_incremental_records():
+    clear_shared_caches()
+    svc = TuningService()
+    sid = svc.submit(StudySpec(tenant="t0",
+                               specs=tuple(_grid(["LoR"], (1, 3)))))
+    recs, status = svc.poll(sid)
+    assert recs == [] and status is StudyStatus.QUEUED
+    seen = list(svc.stream(sid))
+    assert len(seen) == 2
+    # records appear in completion (simulated-time) order, one per replica
+    assert sorted(row["replica"] for row in seen) == [0, 1]
+    for row in seen:
+        assert row["study_id"] == sid and row["tenant"] == "t0"
+        assert row["workload"] == "LoR"
+        for m in ("cost", "refunded", "jct", "free_frac", "top1_correct",
+                  "top3_contains_best", "pcr"):
+            assert m in row
+    recs, status = svc.poll(sid, cursor=1)
+    assert len(recs) == 1 and status is StudyStatus.DONE
+    assert svc.registry.get(sid).result.replicas[0].result is not None
+
+
+def test_cancel_and_pause_resume():
+    clear_shared_caches()
+    svc = TuningService()
+    a = svc.submit(_small_study("t0"))
+    assert svc.cancel(a) and svc.registry.get(a).status is \
+        StudyStatus.CANCELLED
+    assert not svc.cancel(a)            # terminal: no-op
+    b = svc.submit(_small_study("t1"))
+    assert svc.pause(b)
+    assert svc.registry.runnable() == []
+    svc.run_until_complete()            # paused studies stay put
+    assert svc.registry.get(b).status is StudyStatus.PAUSED
+    assert svc.resume(b)
+    svc.run_until_complete()
+    assert svc.registry.get(b).status is StudyStatus.DONE
+
+
+def test_unknown_study_id_raises():
+    svc = TuningService()
+    with pytest.raises(KeyError, match="unknown study id"):
+        svc.poll("study-9999")
+    with pytest.raises(ValueError, match="unknown fairness policy"):
+        TuningService(policy="round-robin")
+
+
+# ---------------------------------------------------------------------------
+# satellite: batched _preview_boundary across a deploy burst
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ("spottune", "asha", "adaptive"))
+def test_batched_preview_bit_exact(policy):
+    """SoaSweep(batch_preview=True) == the scalar per-row preview loop on
+    every observable (the vectorized searchsorted satellite)."""
+    from repro.sweep.runner import SweepRunner
+    from repro.sweep.soa import SoaSweep
+
+    names = [w.name for w in WORKLOADS[:3]]
+    specs = _grid(names, (1, 3), scheduler=policy)
+    runner = SweepRunner()
+    by_mode = {}
+    for flag in (True, False):
+        clear_shared_caches()
+        tuners = runner.prepare(specs)
+        SoaSweep(tuners, batch_preview=flag).run()
+        by_mode[flag] = tuners
+    for spec, tb, ts in zip(specs, by_mode[True], by_mode[False]):
+        label = f"{spec.workload}/m{spec.market_seed}"
+        assert tb.result is not None and ts.result is not None, label
+        assert tb.engine.events == ts.engine.events, label
+        assert tb.engine.market.billed == ts.engine.market.billed, label
+        for f in ("cost", "refunded", "jct", "predicted_rank",
+                  "redeployments"):
+            assert getattr(tb.result, f) == getattr(ts.result, f), \
+                (label, f)
+
+
+def test_preview_batch_matches_scalar_per_call():
+    """Direct per-call agreement of preview_boundary_batch with
+    _preview_boundary on live engine state mid-run."""
+    from repro.sweep.runner import SweepRunner
+    from repro.sweep.soa import SoaSweep
+    from repro.tuner.engine import Status, preview_boundary_batch
+
+    specs = _grid(["LoR", "SVM"], (1, 3))
+    clear_shared_caches()
+    tuners = SweepRunner().prepare(specs)
+    sweep = SoaSweep(tuners)
+    for _ in range(12):
+        if not sweep.step():
+            break
+        items = []
+        for eng in sweep.engines:
+            for st in eng._active:
+                if st.status is Status.RUNNING and eng._has_preview:
+                    start = max(st.ready_at, st._last_t)
+                    items.append((eng, st, start, st._spt,
+                                  int(st._next_k) - 1, int(st._next_k) + 40))
+        if not items:
+            continue
+        batch = preview_boundary_batch(items)
+        scalar = [eng._preview_boundary(st, s0, sp, kn, kl)
+                  for eng, st, s0, sp, kn, kl in items]
+        assert batch == scalar
+
+
+# ---------------------------------------------------------------------------
+# registry catalog
+# ---------------------------------------------------------------------------
+
+
+def test_registry_exposes_fairness_catalog():
+    from repro.tuner.registry import describe, describe_json, \
+        make_fairness_policy
+
+    info = describe_json()
+    assert set(info["fairness"]) == {"fifo", "maxmin", "budget"}
+    assert "fairness" in describe()
+    pol = make_fairness_policy("maxmin", {"max_active": 3})
+    assert isinstance(pol, WeightedMaxMinPolicy)
+    assert pol.max_active == 3
